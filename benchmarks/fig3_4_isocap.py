@@ -1,0 +1,48 @@
+"""Paper Figs. 3/4: iso-capacity dynamic/leakage energy and EDP."""
+
+from __future__ import annotations
+
+from repro.core import isocap
+from repro.core.calibration import PAPER_CLAIMS
+
+
+def run() -> dict:
+    rows_ = isocap.analyze()
+    summary = isocap.summary(rows_)
+    rows = []
+    for r in rows_:
+        for mem in ("stt", "sot"):
+            rows.append(dict(
+                workload=r.workload,
+                stage="train" if r.training else "infer",
+                mem=mem,
+                dyn_x=r.norm("dyn", mem),
+                leak_x=r.norm("leak", mem),
+                energy_x=r.norm("energy", mem),
+                edp_x=r.norm("edp", mem, include_dram=True),
+                rw_ratio=r.read_write_ratio,
+            ))
+    claims = PAPER_CLAIMS
+    checks = {
+        "stt_dyn_x": (summary["stt"]["dyn_energy_x"],
+                      claims["isocap_dyn_energy_x"]["stt"]),
+        "sot_dyn_x": (summary["sot"]["dyn_energy_x"],
+                      claims["isocap_dyn_energy_x"]["sot"]),
+        "stt_leak_red": (summary["stt"]["leak_reduction"],
+                         claims["isocap_leak_reduction"]["stt"]),
+        "sot_leak_red": (summary["sot"]["leak_reduction"],
+                         claims["isocap_leak_reduction"]["sot"]),
+        "stt_energy_red": (summary["stt"]["energy_reduction"],
+                           claims["isocap_energy_reduction"]["stt"]),
+        "sot_energy_red": (summary["sot"]["energy_reduction"],
+                           claims["isocap_energy_reduction"]["sot"]),
+        "stt_edp_red_max": (summary["stt"]["edp_reduction_max"],
+                            claims["isocap_edp_reduction_max"]["stt"]),
+        "sot_edp_red_max": (summary["sot"]["edp_reduction_max"],
+                            claims["isocap_edp_reduction_max"]["sot"]),
+        "sram_read_share": (summary["sram"]["read_share_of_dyn"],
+                            claims["sram_read_share_of_dyn"]),
+    }
+    return {"rows": rows, "summary": summary, "claims": checks,
+            "derived": ",".join(f"{k}={m:.2f}/(paper {p})"
+                                for k, (m, p) in checks.items())}

@@ -1,0 +1,34 @@
+"""Paper Fig. 5: batch-size impact on EDP (AlexNet, iso-capacity)."""
+
+from __future__ import annotations
+
+from repro.core import isocap
+from repro.core.calibration import PAPER_CLAIMS
+from repro.core.workloads import alexnet
+
+
+def run() -> dict:
+    rows = []
+    spans = {}
+    for training in (True, False):
+        sweep = isocap.batch_sweep(alexnet(), training)
+        for r in sweep:
+            for mem in ("stt", "sot"):
+                rows.append(dict(stage="train" if training else "infer",
+                                 batch=r.batch, mem=mem,
+                                 edp_reduction=1 / r.norm("edp", mem, True),
+                                 rw_ratio=r.read_write_ratio))
+        for mem in ("stt", "sot"):
+            reds = [1 / r.norm("edp", mem, True) for r in sweep]
+            spans[f"{mem}_{'train' if training else 'infer'}"] = (
+                min(reds), max(reds))
+    claims = {
+        "stt_train": PAPER_CLAIMS["batch_sweep_train_edp"]["stt"],
+        "sot_train": PAPER_CLAIMS["batch_sweep_train_edp"]["sot"],
+        "stt_infer": PAPER_CLAIMS["batch_sweep_infer_edp"]["stt"],
+        "sot_infer": PAPER_CLAIMS["batch_sweep_infer_edp"]["sot"],
+    }
+    return {"rows": rows, "spans": spans, "claims": claims,
+            "derived": ",".join(
+                f"{k}=({v[0]:.1f}..{v[1]:.1f})/(paper {claims[k]})"
+                for k, v in spans.items())}

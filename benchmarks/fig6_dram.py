@@ -1,0 +1,18 @@
+"""Paper Fig. 6: DRAM access reduction vs LLC capacity (iso-area)."""
+
+from __future__ import annotations
+
+from repro.core import isoarea
+from repro.core.calibration import PAPER_CLAIMS
+
+
+def run() -> dict:
+    curve = isoarea.dram_reduction_curve()
+    rows = [dict(capacity_mb=c, dram_reduction_pct=v)
+            for c, v in curve.items()]
+    anchors = PAPER_CLAIMS["isoarea_dram_reduction_pct"]
+    checks = {"at_7mb": (curve[7], anchors["stt"]),
+              "at_10mb": (curve[10], anchors["sot"])}
+    return {"rows": rows, "claims": checks,
+            "derived": ",".join(f"{k}={m:.1f}%/(paper {p}%)"
+                                for k, (m, p) in checks.items())}

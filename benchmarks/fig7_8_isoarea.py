@@ -1,0 +1,48 @@
+"""Paper Figs. 7/8: iso-area energy and EDP (with/without DRAM terms)."""
+
+from __future__ import annotations
+
+from repro.core import isoarea
+from repro.core.calibration import PAPER_CLAIMS
+
+
+def run() -> dict:
+    d = isoarea.designs()
+    rows_ = isoarea.analyze()
+    summary = isoarea.summary(rows_)
+    rows = []
+    for r in rows_:
+        for mem in ("stt", "sot"):
+            rows.append(dict(
+                workload=r.workload,
+                stage="train" if r.training else "infer",
+                mem=mem,
+                dyn_x=r.norm("dyn", mem),
+                leak_x=r.norm("leak", mem),
+                edp_x_no_dram=r.norm("edp", mem, include_dram=False),
+                edp_x_with_dram=r.norm("edp", mem, include_dram=True),
+            ))
+    claims = PAPER_CLAIMS
+    checks = {
+        "stt_capacity_mb": (d.stt_capacity_mb, 7),
+        "sot_capacity_mb": (d.sot_capacity_mb, 10),
+        "stt_dyn_x": (summary["stt"]["dyn_energy_x"],
+                      claims["isoarea_dyn_energy_x"]["stt"]),
+        "sot_dyn_x": (summary["sot"]["dyn_energy_x"],
+                      claims["isoarea_dyn_energy_x"]["sot"]),
+        "stt_leak_red": (summary["stt"]["leak_reduction"],
+                         claims["isoarea_leak_reduction"]["stt"]),
+        "sot_leak_red": (summary["sot"]["leak_reduction"],
+                         claims["isoarea_leak_reduction"]["sot"]),
+        "stt_edp_no_dram": (summary["stt"]["edp_reduction_no_dram"],
+                            claims["isoarea_edp_reduction_no_dram"]["stt"]),
+        "sot_edp_no_dram": (summary["sot"]["edp_reduction_no_dram"],
+                            claims["isoarea_edp_reduction_no_dram"]["sot"]),
+        "stt_edp_with_dram": (summary["stt"]["edp_reduction_with_dram"],
+                              claims["isoarea_edp_reduction_with_dram"]["stt"]),
+        "sot_edp_with_dram": (summary["sot"]["edp_reduction_with_dram"],
+                              claims["isoarea_edp_reduction_with_dram"]["sot"]),
+    }
+    return {"rows": rows, "summary": summary, "claims": checks,
+            "derived": ",".join(f"{k}={m:.2f}/(paper {p})"
+                                for k, (m, p) in checks.items())}

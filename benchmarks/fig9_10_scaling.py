@@ -1,0 +1,31 @@
+"""Paper Figs. 9/10: scalability analysis (PPA + workload sweeps)."""
+
+from __future__ import annotations
+
+from repro.core import scaling
+from repro.core.calibration import PAPER_CLAIMS
+
+
+def run() -> dict:
+    ppa = [r.__dict__ for r in scaling.ppa_sweep()]
+    wl = scaling.workload_sweep()
+    head = scaling.headline(wl)
+    rows = [r.__dict__ for r in wl]
+    claims = PAPER_CLAIMS
+    checks = {
+        "stt_energy_red_max": (head["stt"]["energy_reduction_max"],
+                               claims["scaling_energy_reduction_max"]["stt"]),
+        "sot_energy_red_max": (head["sot"]["energy_reduction_max"],
+                               claims["scaling_energy_reduction_max"]["sot"]),
+        "stt_latency_red_max": (head["stt"]["latency_reduction_max"],
+                                claims["scaling_latency_reduction_max"]["stt"]),
+        "sot_latency_red_max": (head["sot"]["latency_reduction_max"],
+                                claims["scaling_latency_reduction_max"]["sot"]),
+        "stt_edp_red_max": (head["stt"]["edp_reduction_max"],
+                            claims["scaling_edp_reduction_max"]["stt"]),
+        "sot_edp_red_max": (head["sot"]["edp_reduction_max"],
+                            claims["scaling_edp_reduction_max"]["sot"]),
+    }
+    return {"rows": rows, "ppa": ppa, "claims": checks,
+            "derived": ",".join(f"{k}={m:.1f}/(paper {p})"
+                                for k, (m, p) in checks.items())}

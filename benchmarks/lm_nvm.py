@@ -1,0 +1,77 @@
+"""Beyond-paper: DeepNVM++ applied to the 10 assigned LM architectures on
+the TPU-v5e-class target (DESIGN.md SS2 hardware adaptation).
+
+Workload memory statistics come from the framework's own analytic traffic
+model (launch/flops.py byte accounting at 128 B transactions), and the
+question becomes the paper's, one platform over: *should the TPU-class
+last-level on-chip buffer (VMEM-capacity regime, 16-64 MB) be SRAM or
+MRAM for LM training/serving?*
+"""
+
+from __future__ import annotations
+
+from repro.core import traffic, tuner
+from repro.core.tech import TPU_V5E
+from repro.core.traffic import AccessStream, TrafficStats, INF
+import repro.configs as configs
+from repro.configs.base import SHAPES
+from repro.launch import flops as flops_mod
+
+LINE = 128
+
+
+def lm_traffic(arch: str, shape_name: str) -> TrafficStats:
+    """AccessStreams of one step of an (arch x shape) cell, from the same
+    analytic model the roofline uses."""
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    acct = flops_mod.account(cfg, shape)
+    tokens = shape.global_batch * (1 if shape.is_decode else shape.seq_len)
+    d = cfg.d_model
+    streams = [
+        AccessStream("weights", acct.param_bytes, False, INF),
+        AccessStream("activations.r",
+                     12.0 * tokens * d * 2.0, False, 4 * tokens * d // 64),
+        AccessStream("activations.w",
+                     6.0 * tokens * d * 2.0, True, 4 * tokens * d // 64),
+        AccessStream("kv.r", acct.kv_read_bytes, False, INF),
+        AccessStream("kv.w", acct.kv_write_bytes, True, INF),
+        AccessStream("logits", tokens * cfg.vocab * 4.0, True, INF),
+    ]
+    if shape.kind == "train":
+        streams += [
+            AccessStream("grads.w", acct.param_bytes, True, INF),
+            AccessStream("opt.r", 3.0 * acct.param_bytes, False, INF),
+            AccessStream("opt.w", 2.0 * acct.param_bytes, True, INF),
+        ]
+    return TrafficStats(f"{arch}/{shape_name}", shape.global_batch,
+                        shape.kind == "train", tuple(streams),
+                        macs_per_batch=acct.flops / 2.0)
+
+
+def run() -> dict:
+    designs = {m: tuner.tuned_design(m, 48) for m in ("sram", "stt", "sot")}
+    rows = []
+    for arch in configs.all_archs():
+        for shape_name in ("train_4k", "decode_32k"):
+            cfg = configs.get(arch)
+            if shape_name == "long_500k" and not cfg.sub_quadratic:
+                continue
+            stats = lm_traffic(arch, shape_name)
+            reps = {m: traffic.energy(stats, d, TPU_V5E)
+                    for m, d in designs.items()}
+            rows.append(dict(
+                arch=arch, shape=shape_name,
+                rw_ratio=stats.read_write_ratio,
+                stt_energy_red=reps["sram"].total_j(False)
+                / reps["stt"].total_j(False),
+                sot_energy_red=reps["sram"].total_j(False)
+                / reps["sot"].total_j(False),
+                stt_edp_red=reps["sram"].edp(True) / reps["stt"].edp(True),
+                sot_edp_red=reps["sram"].edp(True) / reps["sot"].edp(True),
+            ))
+    mean_sot = sum(r["sot_edp_red"] for r in rows) / len(rows)
+    mean_stt = sum(r["stt_edp_red"] for r in rows) / len(rows)
+    return {"rows": rows,
+            "derived": (f"lm_mean_edp_red_stt={mean_stt:.2f},"
+                        f"sot={mean_sot:.2f} @48MB TPU-class buffer")}

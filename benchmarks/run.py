@@ -1,0 +1,43 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (derived = the reproduced headline
+quantities vs the paper's values) and writes detailed per-row CSVs to
+runs/benchmarks/.
+"""
+
+from __future__ import annotations
+
+import importlib
+import time
+
+from repro.core.report import write_csv
+
+MODULES = (
+    "table1_bitcell",
+    "table2_cache",
+    "fig3_4_isocap",
+    "fig5_batch",
+    "fig6_dram",
+    "fig7_8_isoarea",
+    "fig9_10_scaling",
+    "lm_nvm",
+)
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for name in MODULES:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.perf_counter()
+        result = mod.run()
+        dt_us = (time.perf_counter() - t0) * 1e6
+        derived = result.get("derived", "")
+        print(f'{name},{dt_us:.0f},"{derived}"')
+        if result.get("rows"):
+            write_csv(f"runs/benchmarks/{name}.csv", result["rows"])
+        if result.get("ppa"):
+            write_csv(f"runs/benchmarks/{name}_ppa.csv", result["ppa"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Paper Table I: bitcell characterization (circuit layer)."""
+
+from __future__ import annotations
+
+from repro.core import bitcell
+from repro.core.calibration import TABLE1
+
+
+def run() -> dict:
+    cells = bitcell.table1()
+    rows, errs = [], []
+    for name in ("stt", "sot"):
+        c = cells[name]
+        ref = TABLE1[name]
+        rows.append(dict(
+            mem=name,
+            sense_lat_ps=c.sense_latency_s * 1e12,
+            sense_e_pj=c.sense_energy_j * 1e12,
+            wlat_set_ps=c.write_latency_set_s * 1e12,
+            wlat_reset_ps=c.write_latency_reset_s * 1e12,
+            we_set_pj=c.write_energy_set_j * 1e12,
+            we_reset_pj=c.write_energy_reset_j * 1e12,
+            fins_read=c.fins_read, fins_write=c.fins_write,
+            area_norm=c.area_norm,
+        ))
+        for model_v, ref_v in (
+                (c.sense_latency_s, ref["sense_lat"]),
+                (c.sense_energy_j, ref["sense_e"]),
+                (c.write_latency_set_s, ref["wlat_set"]),
+                (c.write_latency_reset_s, ref["wlat_reset"]),
+                (c.write_energy_set_j, ref["we_set"]),
+                (c.write_energy_reset_j, ref["we_reset"]),
+                (c.area_norm, ref["area"])):
+            errs.append(abs(model_v - ref_v) / ref_v)
+    return {"rows": rows, "max_rel_err": max(errs),
+            "derived": f"max_rel_err={max(errs):.4f}"}

@@ -1,0 +1,36 @@
+"""Paper Table II: EDAP-tuned cache designs (Algorithm 1 + NVSim layer)."""
+
+from __future__ import annotations
+
+from repro.core import tuner
+from repro.core.calibration import TABLE2
+
+
+def run() -> dict:
+    designs = tuner.table2()
+    rows, errs, isoarea_errs = [], [], []
+    for col, d in designs.items():
+        ref = TABLE2[col]
+        row = dict(column=col, capacity_mb=d.capacity_mb,
+                   read_lat_ns=d.read_latency_s * 1e9,
+                   write_lat_ns=d.write_latency_s * 1e9,
+                   read_e_nj=d.read_energy_j * 1e9,
+                   write_e_nj=d.write_energy_j * 1e9,
+                   leak_mw=d.leakage_w * 1e3,
+                   area_mm2=d.area_mm2,
+                   org=str(d.org))
+        rows.append(row)
+        pairs = ((d.capacity_mb, ref["cap"]),
+                 (d.read_latency_s * 1e9, ref["rlat"]),
+                 (d.write_latency_s * 1e9, ref["wlat"]),
+                 (d.read_energy_j * 1e9, ref["re"]),
+                 (d.write_energy_j * 1e9, ref["we"]),
+                 (d.leakage_w * 1e3, ref["leak"]),
+                 (d.area_mm2, ref["area"]))
+        rel = [abs(m - r) / r for m, r in pairs]
+        (isoarea_errs if "isoarea" in col else errs).extend(rel)
+    return {"rows": rows,
+            "anchor_max_rel_err": max(errs),
+            "isoarea_max_rel_err": max(isoarea_errs),
+            "derived": (f"3MB_anchor_err={max(errs):.4f},"
+                        f"isoarea_err={max(isoarea_errs):.4f}")}

@@ -1,0 +1,23 @@
+"""Design-space exploration with DeepNVM++ (the paper's framework claim):
+sweep technology x capacity x workload and emit the EDP landscape.
+
+    PYTHONPATH=src python examples/nvm_dse.py
+"""
+from repro.core import scaling, traffic, tuner
+from repro.core.report import markdown_table
+from repro.core.workloads import paper_workloads
+
+rows = []
+for cap in (2, 3, 6, 12, 24):
+    designs = {m: tuner.tuned_design(m, cap) for m in ("sram", "stt", "sot")}
+    for wname, w in paper_workloads().items():
+        stats = traffic.build(w, batch=4, training=False)
+        base = traffic.energy(stats, designs["sram"])
+        for m in ("stt", "sot"):
+            rep = traffic.energy(stats, designs[m])
+            rows.append(dict(capacity_mb=cap, workload=wname, mem=m,
+                             edp_reduction=round(
+                                 base.edp(True) / rep.edp(True), 2)))
+print(markdown_table(rows))
+best = max(rows, key=lambda r: r["edp_reduction"])
+print("\nbest design point:", best)

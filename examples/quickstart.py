@@ -1,0 +1,42 @@
+"""Quickstart: the DeepNVM++ pipeline end-to-end in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. characterize bitcells (paper Table I),
+2. EDAP-tune caches at 3 MB (paper Table II / Algorithm 1),
+3. fold a DL workload's memory behavior through the models (paper Fig. 4),
+4. ask the paper's question for one assigned LM arch on the TPU target.
+"""
+from repro.core import bitcell, isocap, traffic, tuner
+from repro.core.workloads import alexnet
+
+# 1. circuit layer
+for name, cell in bitcell.table1().items():
+    print(f"{name}: write {cell.write_latency_avg_s*1e9:.2f} ns "
+          f"{cell.write_energy_avg_j*1e12:.2f} pJ area {cell.area_norm}x")
+
+# 2. microarchitecture layer (Algorithm 1)
+designs = {m: tuner.tuned_design(m, 3) for m in ("sram", "stt", "sot")}
+for m, d in designs.items():
+    print(f"{m}: rd {d.read_latency_s*1e9:.2f} ns, leak {d.leakage_w:.2f} W, "
+          f"area {d.area_mm2:.2f} mm2 [{d.org}]")
+
+# 3. architecture layer: AlexNet inference on the 1080 Ti calibration target
+stats = traffic.build(alexnet(), batch=4, training=False)
+for m, d in designs.items():
+    rep = traffic.energy(stats, d)
+    print(f"{m}: E {rep.total_j(False)*1e3:.1f} mJ, EDP "
+          f"{rep.edp(True)*1e6:.2f} mJ*ms")
+
+# 4. the same question for an assigned LM architecture on TPU-class HW
+import os, sys
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from benchmarks.lm_nvm import lm_traffic
+from repro.core.tech import TPU_V5E
+designs48 = {m: tuner.tuned_design(m, 48) for m in ("sram", "stt", "sot")}
+lm_stats = lm_traffic("tinyllama-1.1b", "decode_32k")
+base = traffic.energy(lm_stats, designs48["sram"], TPU_V5E)
+for m in ("stt", "sot"):
+    rep = traffic.energy(lm_stats, designs48[m], TPU_V5E)
+    print(f"tinyllama decode_32k, {m} 48MB buffer: "
+          f"EDP reduction {base.edp(True)/rep.edp(True):.1f}x")

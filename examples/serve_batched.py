@@ -1,0 +1,8 @@
+"""Batched serving example: prefill + KV-cache decode on a reduced config.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.launch import serve
+
+serve.main(["--arch", "qwen3-14b", "--reduced", "--batch", "4",
+            "--prompt-len", "32", "--gen", "16"])

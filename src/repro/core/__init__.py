@@ -1,0 +1,25 @@
+"""DeepNVM++ — cross-layer NVM cache modeling framework (the paper's core).
+
+Layers (paper Fig. 2):
+    mtj / bitcell      circuit-level device characterization   (Table I)
+    cachemodel / tuner NVSim-style cache design + Alg. 1       (Table II)
+    workloads / traffic DL workload memory statistics          (SIII-C)
+    cachesim           trace/analytic DRAM model               (SIII-D)
+    isocap / isoarea / scaling   architecture-level analyses   (Figs 3-10)
+"""
+
+from repro.core import (  # noqa: F401
+    bitcell,
+    cachemodel,
+    cachesim,
+    calibration,
+    isoarea,
+    isocap,
+    mtj,
+    report,
+    scaling,
+    tech,
+    traffic,
+    tuner,
+    workloads,
+)

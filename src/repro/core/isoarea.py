@@ -1,0 +1,89 @@
+"""Iso-area analysis — paper §III-D / §IV-B (Figs. 6, 7, 8).
+
+The NVM density advantage is spent on capacity: the MRAM cache that fits
+the 3 MB SRAM area budget (7 MB STT / 10 MB SOT, from the tuner's area
+model).  The larger capacity reduces DRAM traffic (Fig. 6 — GPGPU-Sim in
+the paper, the reuse-distance model here), which is where iso-area MRAM
+wins: slower, bigger caches, but far fewer costly off-chip accesses.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections.abc import Sequence
+
+from repro.core import traffic, tuner
+from repro.core.isocap import IsoCapRow, INFER_BATCH, TRAIN_BATCH
+from repro.core.tech import Platform, GTX_1080TI
+from repro.core.workloads import Workload, paper_workloads, alexnet
+
+
+@dataclasses.dataclass(frozen=True)
+class IsoAreaDesigns:
+    sram: object
+    stt: object
+    sot: object
+    stt_capacity_mb: int
+    sot_capacity_mb: int
+
+    def as_dict(self):
+        return {"sram": self.sram, "stt": self.stt, "sot": self.sot}
+
+
+def designs(sram_capacity_mb: float = 3.0) -> IsoAreaDesigns:
+    stt_mb = tuner.iso_area_capacity("stt", sram_capacity_mb)
+    sot_mb = tuner.iso_area_capacity("sot", sram_capacity_mb)
+    return IsoAreaDesigns(
+        sram=tuner.tuned_design("sram", sram_capacity_mb),
+        stt=tuner.tuned_design("stt", stt_mb),
+        sot=tuner.tuned_design("sot", sot_mb),
+        stt_capacity_mb=stt_mb,
+        sot_capacity_mb=sot_mb,
+    )
+
+
+def dram_reduction_curve(workload: Workload | None = None, batch: int = INFER_BATCH,
+                         training: bool = False,
+                         capacities_mb: Sequence[float] = (3, 6, 7, 10, 12, 24),
+                         ) -> dict[float, float]:
+    """Fig. 6: % reduction in DRAM accesses vs the 3 MB baseline as the
+    last-level cache grows (paper: AlexNet via GPGPU-Sim/DarkNet)."""
+    w = workload if workload is not None else alexnet()
+    stats = traffic.build(w, batch, training)
+    base = stats.dram_tx(3 * 2**20)
+    return {c: 100.0 * (1.0 - stats.dram_tx(c * 2**20) / base)
+            for c in capacities_mb}
+
+
+def analyze(workloads: dict[str, Workload] | None = None,
+            platform: Platform = GTX_1080TI,
+            infer_batch: int = INFER_BATCH,
+            train_batch: int = TRAIN_BATCH) -> list[IsoCapRow]:
+    """Figs. 7/8: energy and EDP at iso-area (with/without DRAM terms)."""
+    workloads = workloads if workloads is not None else paper_workloads()
+    d = designs().as_dict()
+    rows = []
+    for w in workloads.values():
+        for training, batch in ((False, infer_batch), (True, train_batch)):
+            stats = traffic.build(w, batch, training)
+            reports = {m: traffic.energy(stats, dsn, platform)
+                       for m, dsn in d.items()}
+            rows.append(IsoCapRow(w.name, training, batch, reports,
+                                  stats.read_write_ratio))
+    return rows
+
+
+def summary(rows: list[IsoCapRow]) -> dict[str, dict[str, float]]:
+    out: dict[str, dict[str, float]] = {}
+    n = len(rows)
+    for mem in ("stt", "sot"):
+        out[mem] = dict(
+            dyn_energy_x=sum(r.norm("dyn", mem) for r in rows) / n,
+            leak_reduction=sum(1 / r.norm("leak", mem) for r in rows) / n,
+            energy_reduction=sum(1 / r.norm("energy", mem) for r in rows) / n,
+            edp_reduction_no_dram=sum(1 / r.norm("edp", mem, False)
+                                      for r in rows) / n,
+            edp_reduction_with_dram=sum(1 / r.norm("edp", mem, True)
+                                        for r in rows) / n,
+        )
+    return out

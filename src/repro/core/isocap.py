@@ -1,0 +1,97 @@
+"""Iso-capacity analysis — paper §III-C / §IV-A (Figs. 3, 4, 5).
+
+Same cache capacity (3 MB) for SRAM, STT-MRAM, SOT-MRAM; workload memory
+statistics from the traffic model; outputs normalized dynamic/leakage
+energy breakdowns, total energy, and EDP per workload for inference
+(batch 4) and training (batch 64), plus the batch-size sweep of Fig. 5.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections.abc import Sequence
+
+from repro.core import traffic, tuner
+from repro.core.tech import Platform, GTX_1080TI
+from repro.core.traffic import EnergyReport
+from repro.core.workloads import Workload, paper_workloads
+
+MEMS = ("sram", "stt", "sot")
+INFER_BATCH = 4
+TRAIN_BATCH = 64
+CAPACITY_MB = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class IsoCapRow:
+    """One (workload, stage) row across all memories."""
+
+    workload: str
+    training: bool
+    batch: int
+    reports: dict[str, EnergyReport]
+    read_write_ratio: float
+
+    def norm(self, metric: str, mem: str, include_dram: bool = False) -> float:
+        """Value for `mem` normalized to SRAM (paper figure convention)."""
+        get = {
+            "dyn": lambda r: r.dyn_j,
+            "leak": lambda r: r.leak_j,
+            "energy": lambda r: r.total_j(include_dram),
+            "edp": lambda r: r.edp(include_dram),
+            "runtime": lambda r: r.runtime_s,
+        }[metric]
+        return get(self.reports[mem]) / get(self.reports["sram"])
+
+
+def analyze(workloads: dict[str, Workload] | None = None,
+            capacity_mb: float = CAPACITY_MB,
+            platform: Platform = GTX_1080TI,
+            infer_batch: int = INFER_BATCH,
+            train_batch: int = TRAIN_BATCH) -> list[IsoCapRow]:
+    """Figs. 3/4: per workload x {inference, training} x memory."""
+    workloads = workloads if workloads is not None else paper_workloads()
+    designs = {m: tuner.tuned_design(m, capacity_mb) for m in MEMS}
+    rows = []
+    for w in workloads.values():
+        for training, batch in ((False, infer_batch), (True, train_batch)):
+            stats = traffic.build(w, batch, training)
+            reports = {m: traffic.energy(stats, d, platform)
+                       for m, d in designs.items()}
+            rows.append(IsoCapRow(w.name, training, batch, reports,
+                                  stats.read_write_ratio))
+    return rows
+
+
+def batch_sweep(workload: Workload, training: bool,
+                batches: Sequence[int] = (1, 2, 4, 8, 16, 32, 64),
+                capacity_mb: float = CAPACITY_MB,
+                platform: Platform = GTX_1080TI) -> list[IsoCapRow]:
+    """Fig. 5: EDP vs batch size (paper: AlexNet, 3 MB iso-capacity)."""
+    designs = {m: tuner.tuned_design(m, capacity_mb) for m in MEMS}
+    rows = []
+    for batch in batches:
+        stats = traffic.build(workload, batch, training)
+        reports = {m: traffic.energy(stats, d, platform)
+                   for m, d in designs.items()}
+        rows.append(IsoCapRow(workload.name, training, batch, reports,
+                              stats.read_write_ratio))
+    return rows
+
+
+def summary(rows: list[IsoCapRow]) -> dict[str, dict[str, float]]:
+    """Aggregates matching the paper's §IV-A prose claims."""
+    out: dict[str, dict[str, float]] = {}
+    n = len(rows)
+    for mem in ("stt", "sot"):
+        out[mem] = dict(
+            dyn_energy_x=sum(r.norm("dyn", mem) for r in rows) / n,
+            leak_reduction=sum(1 / r.norm("leak", mem) for r in rows) / n,
+            energy_reduction=sum(1 / r.norm("energy", mem) for r in rows) / n,
+            edp_reduction_mean=sum(1 / r.norm("edp", mem, True) for r in rows) / n,
+            edp_reduction_max=max(1 / r.norm("edp", mem, True) for r in rows),
+        )
+    sram_read_share = [
+        r.reports["sram"].dyn_read_j / r.reports["sram"].dyn_j for r in rows]
+    out["sram"] = dict(read_share_of_dyn=sum(sram_read_share) / n)
+    return out

@@ -1,0 +1,50 @@
+"""CSV/markdown emission helpers shared by benchmarks and launch tools."""
+
+from __future__ import annotations
+
+import csv
+import io
+import os
+from collections.abc import Iterable, Mapping, Sequence
+
+
+def csv_str(rows: Sequence[Mapping[str, object]],
+            fields: Sequence[str] | None = None) -> str:
+    if not rows:
+        return ""
+    fields = list(fields) if fields else list(rows[0].keys())
+    buf = io.StringIO()
+    w = csv.DictWriter(buf, fieldnames=fields, extrasaction="ignore")
+    w.writeheader()
+    for r in rows:
+        w.writerow({k: _fmt(r.get(k)) for k in fields})
+    return buf.getvalue()
+
+
+def write_csv(path: str, rows: Sequence[Mapping[str, object]],
+              fields: Sequence[str] | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        f.write(csv_str(rows, fields))
+
+
+def markdown_table(rows: Sequence[Mapping[str, object]],
+                   fields: Sequence[str] | None = None) -> str:
+    if not rows:
+        return "(empty)"
+    fields = list(fields) if fields else list(rows[0].keys())
+    out = ["| " + " | ".join(fields) + " |",
+           "|" + "|".join("---" for _ in fields) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(_fmt(r.get(k))) for k in fields) + " |")
+    return "\n".join(out)
+
+
+def _fmt(v: object) -> object:
+    if isinstance(v, float):
+        if v == 0:
+            return 0
+        if abs(v) >= 1e5 or abs(v) < 1e-3:
+            return f"{v:.4g}"
+        return round(v, 4)
+    return v

@@ -1,0 +1,108 @@
+"""Scalability analysis — paper §IV-C (Figs. 9, 10).
+
+Each memory technology is EDAP-tuned independently at every capacity
+(Algorithm 1), then folded through the workload model to produce mean
+normalized energy / latency / EDP vs SRAM across all workloads — the
+paper's projection for the GPU L2 growth trend of Fig. 1 (and, in our
+hardware adaptation, for TPU-class on-chip buffer capacities).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from collections.abc import Sequence
+
+from repro.core import traffic, tuner
+from repro.core.isocap import INFER_BATCH, TRAIN_BATCH, MEMS
+from repro.core.tech import Platform, GTX_1080TI
+from repro.core.workloads import Workload, paper_workloads
+
+CAPACITIES_MB = (1, 2, 4, 8, 16, 32)  # paper Algorithm 1's capacity set
+
+
+@dataclasses.dataclass(frozen=True)
+class PPARow:
+    """Fig. 9: raw PPA of the tuned design at one capacity."""
+
+    capacity_mb: float
+    mem: str
+    read_latency_ns: float
+    write_latency_ns: float
+    read_energy_nj: float
+    write_energy_nj: float
+    leakage_w: float
+    area_mm2: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalingRow:
+    """Fig. 10: workload-mean normalized metrics at one capacity."""
+
+    capacity_mb: float
+    mem: str
+    training: bool
+    energy_x: float      # mean E_mem / E_sram   (lower is better)
+    latency_x: float
+    edp_x: float
+    energy_std: float
+    edp_std: float
+
+
+def ppa_sweep(capacities_mb: Sequence[float] = CAPACITIES_MB) -> list[PPARow]:
+    rows = []
+    for cap in capacities_mb:
+        for mem in MEMS:
+            d = tuner.tuned_design(mem, cap)
+            rows.append(PPARow(
+                capacity_mb=cap, mem=mem,
+                read_latency_ns=d.read_latency_s * 1e9,
+                write_latency_ns=d.write_latency_s * 1e9,
+                read_energy_nj=d.read_energy_j * 1e9,
+                write_energy_nj=d.write_energy_j * 1e9,
+                leakage_w=d.leakage_w,
+                area_mm2=d.area_mm2,
+            ))
+    return rows
+
+
+def workload_sweep(capacities_mb: Sequence[float] = CAPACITIES_MB,
+                   workloads: dict[str, Workload] | None = None,
+                   platform: Platform = GTX_1080TI) -> list[ScalingRow]:
+    workloads = workloads if workloads is not None else paper_workloads()
+    rows = []
+    for cap in capacities_mb:
+        designs = {m: tuner.tuned_design(m, cap) for m in MEMS}
+        for training, batch in ((False, INFER_BATCH), (True, TRAIN_BATCH)):
+            stats = {name: traffic.build(w, batch, training)
+                     for name, w in workloads.items()}
+            for mem in ("stt", "sot"):
+                ex, lx, ed = [], [], []
+                for name in workloads:
+                    r_mem = traffic.energy(stats[name], designs[mem], platform)
+                    r_sram = traffic.energy(stats[name], designs["sram"], platform)
+                    ex.append(r_mem.total_j(False) / r_sram.total_j(False))
+                    lx.append(r_mem.runtime_s / r_sram.runtime_s)
+                    ed.append(r_mem.edp(True) / r_sram.edp(True))
+                rows.append(ScalingRow(
+                    capacity_mb=cap, mem=mem, training=training,
+                    energy_x=statistics.mean(ex),
+                    latency_x=statistics.mean(lx),
+                    edp_x=statistics.mean(ed),
+                    energy_std=statistics.pstdev(ex),
+                    edp_std=statistics.pstdev(ed),
+                ))
+    return rows
+
+
+def headline(rows: list[ScalingRow]) -> dict[str, dict[str, float]]:
+    """Paper §IV-C claims: max reductions across the capacity sweep."""
+    out = {}
+    for mem in ("stt", "sot"):
+        sub = [r for r in rows if r.mem == mem]
+        out[mem] = dict(
+            energy_reduction_max=max(1 / r.energy_x for r in sub),
+            latency_reduction_max=max(1 / r.latency_x for r in sub),
+            edp_reduction_max=max(1 / r.edp_x for r in sub),
+        )
+    return out

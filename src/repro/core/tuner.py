@@ -1,0 +1,77 @@
+"""EDAP-optimal cache tuning — paper Algorithm 1.
+
+For each (memory technology, capacity): sweep every optimization target
+(read/write latency, read/write energy, read/write EDP, area, leakage) and
+every access type; each (target, access) pair nominates the design point
+that optimizes it; keep the nominee with the smallest EDAP.  This mirrors
+the paper's use of NVSim's optimization-target knob and guarantees each
+technology is compared at its own best configuration ("a fair comparison
+that encompasses all and not just one of the design constraint dimensions").
+"""
+
+from __future__ import annotations
+
+from collections.abc import Callable, Iterable
+
+from repro.core.cachemodel import ASSOC  # noqa: F401  (re-export convenience)
+from repro.core.cachemodel import ACCESS_TYPES, CacheDesign, CacheModel
+from repro.core.calibration import ISO_AREA_TOLERANCE
+
+# NVSim optimization targets (paper Algorithm 1's set O).
+OPT_TARGETS: dict[str, Callable[[CacheDesign], float]] = {
+    "read_latency": lambda d: d.read_latency_s,
+    "write_latency": lambda d: d.write_latency_s,
+    "read_energy": lambda d: d.read_energy_j,
+    "write_energy": lambda d: d.write_energy_j,
+    "read_edp": lambda d: d.read_latency_s * d.read_energy_j,
+    "write_edp": lambda d: d.write_latency_s * d.write_energy_j,
+    "area": lambda d: d.area_mm2,
+    "leakage": lambda d: d.leakage_w,
+}
+
+
+def tune(model: CacheModel, capacity_bytes: int) -> CacheDesign:
+    """Algorithm 1 for one (mem, capacity): min-EDAP over target nominees."""
+    designs = [model.evaluate(capacity_bytes, org)
+               for org in model.design_space(capacity_bytes)]
+    if not designs:
+        raise ValueError(f"empty design space at {capacity_bytes} bytes")
+    best: CacheDesign | None = None
+    for metric in OPT_TARGETS.values():
+        for access in ACCESS_TYPES:
+            pool = [d for d in designs if d.org.access == access]
+            nominee = min(pool, key=metric)
+            if best is None or nominee.edap() < best.edap():
+                best = nominee
+    return best
+
+
+def tuned_design(mem: str, capacity_mb: float) -> CacheDesign:
+    """Convenience: EDAP-tuned design for `mem` at `capacity_mb`."""
+    return tune(CacheModel(mem), int(capacity_mb * 2**20))
+
+
+def iso_area_capacity(mem: str, sram_capacity_mb: float = 3.0,
+                      search_mb: Iterable[int] = range(1, 65)) -> int:
+    """Largest (integer-MB) capacity of `mem` fitting the SRAM area budget.
+
+    Paper §III-B scenario (ii): reuse the SRAM cache's area for a larger
+    NVM cache.  Tolerance: the paper's own 10 MB SOT point is 5.64 mm^2 vs
+    5.53 mm^2 SRAM (+2%), so the budget is 1.02x the SRAM area.
+    """
+    budget = tuned_design("sram", sram_capacity_mb).area_mm2 * ISO_AREA_TOLERANCE
+    feasible = [mb for mb in search_mb
+                if tuned_design(mem, mb).area_mm2 <= budget]
+    if not feasible:
+        raise ValueError(f"no iso-area capacity for {mem}")
+    return max(feasible)
+
+
+def table2() -> dict[str, CacheDesign]:
+    """Reproduce paper Table II: 3 MB iso-capacity columns for all three
+    technologies plus the iso-area columns for the MRAM flavors."""
+    out = {mem: tuned_design(mem, 3) for mem in ("sram", "stt", "sot")}
+    for mem in ("stt", "sot"):
+        cap = iso_area_capacity(mem)
+        out[f"{mem}_isoarea"] = tuned_design(mem, cap)
+    return out

@@ -1,0 +1,32 @@
+"""Elastic scaling: re-shard a training state onto a different mesh.
+
+When the device pool changes (node failure shrinks a pod, or capacity
+returns), the checkpointed state must be re-laid-out for the new mesh.
+Because sharding rules (distributed/sharding.py) are *functions of the
+mesh*, elasticity is: load (host) state -> compute specs for the new mesh
+-> device_put each leaf with its new NamedSharding.  Batches keep their
+step addressing (data/pipeline.py), so training resumes exactly where it
+left off with a different data-parallel width — only throughput changes.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.distributed import sharding
+
+
+def reshard_state(state, new_mesh, *, fsdp: bool = False):
+    """Place every leaf of `state` onto `new_mesh` under the rule set."""
+    shardings = sharding.tree_shardings(state, new_mesh, "param", fsdp=fsdp)
+    return jax.tree.map(
+        lambda leaf, sh: jax.device_put(leaf, sh), state, shardings)
+
+
+def rebalance_batch(global_batch: int, new_mesh) -> int:
+    """Per-host batch after an elastic resize (global batch preserved when
+    divisible; otherwise the largest divisible batch <= requested)."""
+    dp = 1
+    for a in sharding.dp_axes(new_mesh):
+        dp *= new_mesh.shape[a]
+    return (global_batch // dp) * dp

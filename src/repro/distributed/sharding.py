@@ -1,0 +1,210 @@
+"""Sharding rules: map every param/cache/batch leaf to a PartitionSpec.
+
+Scheme (Megatron-style TP on `model`, DP/FSDP on `data` (+`pod`)):
+
+  * embeddings       vocab on `model` (fallback: d_model)
+  * attention q/o    heads on `model`; k/v heads on `model` when divisible
+  * MLP              d_ff on `model`
+  * MoE experts      expert dim on `model` (expert parallelism)
+  * FSDP (optional)  largest remaining dim over `data` (+`pod`)
+  * batch/caches     batch on (`pod`,`data`); seq on `model` for batch-1
+                     long-context caches; replicate what does not divide
+
+Divisibility is never assumed: each rule emits an ordered list of
+candidate (dim -> axis) assignments and `best_fit` keeps the first ones
+that divide — e.g. Qwen3's 40 heads don't split over model=16, so TP falls
+back to sharding d_model; MiniCPM's 122753-token vocab falls back the same
+way.  This is what makes one rule set serve all 10 architectures.
+"""
+
+from __future__ import annotations
+
+from collections.abc import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MODEL_AXIS = "model"
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Data-parallel axes: `data`, plus `pod` folded in when present."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        sz = 1
+        for a in axis:
+            sz *= mesh.shape[a]
+        return sz
+    return mesh.shape[axis]
+
+
+def best_fit(shape: Sequence[int], mesh: Mesh,
+             preferences: Sequence[tuple[int, object]]) -> P:
+    """Greedy first-fit: keep each (dim, axis) whose size divides the dim
+    and whose axis is still unused; replicate everything else."""
+    assignment: dict[int, object] = {}
+    used: set[str] = set()
+    for dim, axis in preferences:
+        if dim >= len(shape) or dim in assignment:
+            continue
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        if any(a not in mesh.axis_names or a in used for a in axes):
+            continue
+        if shape[dim] % _axis_size(mesh, axis) != 0 or shape[dim] == 0:
+            continue
+        assignment[dim] = axis
+        used.update(axes)
+    return P(*[assignment.get(i) for i in range(len(shape))])
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def param_spec(path, leaf, mesh: Mesh, *, fsdp: bool = False,
+               stacked: bool = True) -> P:
+    """PartitionSpec for one model/optimizer parameter leaf.
+
+    `stacked`: leaves inside scan segments have a leading layer dim that is
+    never sharded; rules index dims relative to the per-layer shape.
+    """
+    name = _path_str(path)
+    shape = leaf.shape
+    off = 1 if (stacked and ("seg" in name or "encoder" in name)
+                and leaf.ndim >= 2) else 0
+    dp = dp_axes(mesh)
+    prefs: list[tuple[int, object]] = []
+
+    def pref(dim_rel: int, axis):
+        prefs.append((dim_rel + off, axis))
+
+    nd = leaf.ndim - off
+    if "embed" in name:                       # (vocab, d) / (d, vocab)
+        big = 0 if shape[0] >= (shape[1] if leaf.ndim > 1 else 0) else 1
+        prefs.append((big, MODEL_AXIS))
+        prefs.append((1 - big, dp if fsdp else MODEL_AXIS))
+    elif any(k in name for k in ("wi_gate", "wi_up", "wo", "wk", "wv", "wq",
+                                 "wr", "wg", "router", "in_proj", "out_proj",
+                                 "x_proj", "dt_proj", "w_lora", "proj",
+                                 "shared", "cmix", "wq_a", "wq_b", "wkv_a",
+                                 "wk_b", "wv_b")):
+        if nd == 3 and ("ffn/wi" in name or "ffn/wo" in name):
+            # MoE experts (E, d, f): expert parallelism
+            pref(0, MODEL_AXIS)
+            if fsdp:
+                pref(2, dp)
+                pref(1, dp)
+        elif nd == 3:                          # (d, H, hd) attention
+            pref(1, MODEL_AXIS)               # heads on model
+            pref(0, MODEL_AXIS)               # fallback: d_model
+            if fsdp:
+                pref(0, dp)
+        elif nd == 2:
+            # 2-D matrices: shard the bigger dim on model, other on data
+            big = 0 if shape[off] >= shape[off + (1 if nd > 1 else 0)] else 1
+            pref(big, MODEL_AXIS)
+            pref(1 - big, MODEL_AXIS)
+            if fsdp:
+                pref(1 - big, dp)
+                pref(big, dp)
+        elif nd == 1 and fsdp:
+            pref(0, dp)
+    elif nd >= 2 and fsdp:
+        pref(0, dp)
+    return best_fit(shape, mesh, prefs)
+
+
+def cache_spec(path, leaf, mesh: Mesh) -> P:
+    """KV/state caches: batch on dp; heads/latent on model; batch-1 long
+    caches shard the sequence dim on model instead."""
+    name = _path_str(path)
+    shape = leaf.shape
+    dp = dp_axes(mesh)
+    # stacked layer dim leads: (L, B, ...)
+    off = 1 if "seg" in name else 0
+    prefs: list[tuple[int, object]] = [(off, dp)]
+    if "pos" in name:
+        return P(*([None] * leaf.ndim))
+    if "ckv" in name or "krope" in name:      # MLA latent (L,B,S,r)
+        prefs.append((off + 1, MODEL_AXIS))   # seq on model
+    elif leaf.ndim - off == 4 and ("k" in name or "v" in name):
+        prefs.append((off + 2, MODEL_AXIS))   # kv heads
+        prefs.append((off + 1, MODEL_AXIS))   # fallback: seq
+    elif "s" in name and leaf.ndim - off == 4:   # rwkv state (B,H,hd,hd)
+        prefs.append((off + 1, MODEL_AXIS))
+        prefs.append((off + 2, MODEL_AXIS))
+    elif leaf.ndim - off >= 2:
+        prefs.append((off + 1, MODEL_AXIS))
+    return best_fit(shape, mesh, prefs)
+
+
+def batch_spec(leaf, mesh: Mesh) -> P:
+    dp = dp_axes(mesh)
+    if leaf.ndim == 0:
+        return P()
+    prefs = [(0, dp), (0, "data")]
+    if leaf.ndim >= 2:
+        prefs.append((1, MODEL_AXIS))  # batch-1 long context: shard seq
+    return best_fit(leaf.shape, mesh, prefs)
+
+
+def tree_specs(tree, mesh: Mesh, kind: str, **kw):
+    """Map a pytree of (abstract) arrays to PartitionSpecs."""
+    fn = {"param": param_spec, "cache": cache_spec}[kind]
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: fn(p, x, mesh, **kw), tree)
+
+
+def tree_shardings(tree, mesh: Mesh, kind: str, **kw):
+    specs = tree_specs(tree, mesh, kind, **kw)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_shardings(batch, mesh: Mesh):
+    return jax.tree.map(lambda x: NamedSharding(mesh, batch_spec(x, mesh)),
+                        batch)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (SSPerf lever): explicit Megatron-style
+# annotations at block boundaries so GSPMD never falls back to involuntary
+# full rematerialization (replicate-then-reshard all-gathers of whole
+# activations, the dominant collective cost in the baseline dry-runs).
+# ---------------------------------------------------------------------------
+
+_ACT = {"mesh": None, "seq_parallel": False}
+
+
+def enable_activation_sharding(mesh: Mesh | None,
+                               seq_parallel: bool = False) -> None:
+    """None disables.  seq_parallel shards the residual stream's sequence
+    dim over `model` (norms/elementwise run sequence-parallel; GSPMD turns
+    the block-boundary all-reduces into reduce-scatter + all-gather)."""
+    _ACT["mesh"] = mesh
+    _ACT["seq_parallel"] = seq_parallel
+
+
+def constrain(x, kind: str):
+    """Annotate activation `x`.  kinds:
+    residual (B,S,d) | heads (B,S,H,hd) | hidden (B,S,f) | logits (B,S,V)
+    """
+    mesh = _ACT["mesh"]
+    if mesh is None:
+        return x
+    dp = dp_axes(mesh)
+    seq = MODEL_AXIS if _ACT["seq_parallel"] else None
+    if kind == "residual":
+        prefs = [(0, dp)] + ([(1, MODEL_AXIS)] if seq else [])
+    elif kind == "heads":
+        prefs = [(0, dp), (2, MODEL_AXIS)]
+    elif kind in ("hidden", "logits"):
+        prefs = [(0, dp), (x.ndim - 1, MODEL_AXIS)]
+    else:
+        raise ValueError(kind)
+    spec = best_fit(x.shape, mesh, prefs)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

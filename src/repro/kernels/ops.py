@@ -1,0 +1,52 @@
+"""Jitted public wrappers: backend dispatch + padding + GQA expansion.
+
+`attention(...)` is what the model layer calls: Pallas kernel on TPU,
+custom-VJP chunked reference elsewhere (this CPU container), naive SDPA
+for short sequences where the quadratic logits are cheap.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import ref
+from repro.kernels import rwkv6 as wkv
+
+# below this q-length, naive SDPA is used (cheapest at small S)
+FLASH_THRESHOLD = 2048
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              q_offset: int = 0, scale: float | None = None,
+              force: str | None = None) -> jax.Array:
+    """Dispatching attention.  q: (B,Sq,H,hd); k,v: (B,Skv,H,hd), H equal
+    (expand GQA upstream)."""
+    sq, skv = q.shape[1], k.shape[1]
+    impl = force or ("naive" if sq < FLASH_THRESHOLD
+                     else ("pallas" if _on_tpu() else "ref"))
+    if impl == "naive":
+        return ref.naive_attention(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset, scale=scale)
+    if impl == "pallas":
+        return fa.flash_attention(q, k, v, causal=causal, window=window,
+                                  q_offset=q_offset)
+    block_k = min(512, skv)
+    return ref.flash_attention_ref(q, k, v, block_k, causal, window,
+                                   q_offset, scale)
+
+
+def rwkv_mix(r, k, v, w, u, *, force: str | None = None):
+    """WKV6: Pallas chunked kernel on TPU, sequential-scan ref elsewhere.
+    Returns (y, s_final); the Pallas path recomputes s_final cheaply from
+    the ref tail when a carry is needed (training uses y only)."""
+    impl = force or ("pallas" if _on_tpu() else "ref")
+    if impl == "pallas":
+        y = wkv.wkv6(r, k, v, w, u)
+        return y, None
+    return ref.wkv6_ref(r, k, v, w, u)

@@ -1,0 +1,179 @@
+"""Pure-jnp oracles for every Pallas kernel + the memory-efficient
+reference implementations the model uses on non-TPU backends.
+
+`flash_attention_ref` is both: a chunked online-softmax attention with a
+custom VJP (recompute in backward — activation memory O(S * chunk) instead
+of O(S^2)), numerically equivalent to naive SDPA.  `naive_attention` is the
+plain quadratic oracle the tests compare everything against.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def naive_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None, q_offset: int = 0,
+                    scale: float | None = None) -> jax.Array:
+    """Quadratic SDPA oracle.  q: (B,Sq,H,hd); k,v: (B,Skv,H,hd)."""
+    hd = q.shape[-1]
+    scale = hd ** -0.5 if scale is None else scale
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    sq, skv = q.shape[1], k.shape[1]
+    q_pos = jnp.arange(sq) + q_offset
+    k_pos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _flash_fwd(q, k, v, *, block_k: int, causal: bool, window,
+               q_offset: int, scale: float):
+    """One pass of online-softmax over kv blocks.  Shapes as naive, plus:
+    k/v may have a single shared head (MLA latent attention) and v may have
+    a different feature dim than q/k."""
+    b, sq, h, hd = q.shape
+    hd_v = v.shape[-1]
+    shared_kv = k.shape[2] == 1 and h > 1
+    skv = k.shape[1]
+    nkv = skv // block_k
+    qf = q.astype(jnp.float32) * scale
+    q_pos = jnp.arange(sq) + q_offset
+    kv_eq = "bqhd,bkd->bhqk" if shared_kv else "bqhd,bkhd->bhqk"
+    pv_eq = "bhqk,bkd->bhqd" if shared_kv else "bhqk,bkhd->bhqd"
+
+    def body(carry, i):
+        m, l, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, i * block_k, block_k, 1)
+        vs = jax.lax.dynamic_slice_in_dim(v, i * block_k, block_k, 1)
+        if shared_kv:
+            ks, vs = ks[:, :, 0, :], vs[:, :, 0, :]
+        s = jnp.einsum(kv_eq, qf, ks.astype(jnp.float32))
+        k_pos = i * block_k + jnp.arange(block_k)
+        mask = jnp.ones((sq, block_k), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= q_pos[:, None] - k_pos[None, :] < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            pv_eq, p, vs.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    acc0 = jnp.zeros((b, h, sq, hd_v), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), jnp.arange(nkv))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype), (m, l)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_ref(q, k, v, block_k: int = 512, causal: bool = True,
+                        window: int | None = None, q_offset: int = 0,
+                        scale: float | None = None):
+    """Memory-efficient attention: O(Sq*block_k) live logits; exact."""
+    hd = q.shape[-1]
+    scale = hd ** -0.5 if scale is None else scale
+    out, _ = _flash_fwd(q, k, v, block_k=block_k, causal=causal,
+                        window=window, q_offset=q_offset, scale=scale)
+    return out
+
+
+def _flash_vjp_fwd(q, k, v, block_k, causal, window, q_offset, scale):
+    hd = q.shape[-1]
+    scale_v = hd ** -0.5 if scale is None else scale
+    out, (m, l) = _flash_fwd(q, k, v, block_k=block_k, causal=causal,
+                             window=window, q_offset=q_offset, scale=scale_v)
+    return out, (q, k, v, out, m, l)
+
+
+def _flash_vjp_bwd(block_k, causal, window, q_offset, scale, res, dout):
+    q, k, v, out, m, l = res
+    hd = q.shape[-1]
+    scale_v = hd ** -0.5 if scale is None else scale
+    b, sq, h, _ = q.shape
+    skv = k.shape[1]
+    shared_kv = k.shape[2] == 1 and h > 1
+    nkv = skv // block_k
+    qf = q.astype(jnp.float32)
+    do = dout.astype(jnp.float32)
+    # delta = rowsum(dO * O)
+    delta = jnp.einsum("bqhd,bqhd->bhq", do, out.astype(jnp.float32))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    q_pos = jnp.arange(sq) + q_offset
+    kv_eq = "bqhd,bkd->bhqk" if shared_kv else "bqhd,bkhd->bhqk"
+    sk_eq = "bhqk,bkd->bqhd" if shared_kv else "bhqk,bkhd->bqhd"
+    dk_eq = "bhqk,bqhd->bkd" if shared_kv else "bhqk,bqhd->bkhd"
+
+    def body(dq_acc, i):
+        ks = jax.lax.dynamic_slice_in_dim(k, i * block_k, block_k, 1)
+        vs = jax.lax.dynamic_slice_in_dim(v, i * block_k, block_k, 1)
+        if shared_kv:
+            ks, vs = ks[:, :, 0, :], vs[:, :, 0, :]
+        s = jnp.einsum(kv_eq, qf * scale_v, ks.astype(jnp.float32))
+        k_pos = i * block_k + jnp.arange(block_k)
+        mask = jnp.ones((sq, block_k), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= q_pos[:, None] - k_pos[None, :] < window
+        s = jnp.where(mask, s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                      # (B,H,Sq,bk)
+        dp = jnp.einsum("bqhe,bke->bhqk" if shared_kv else "bqhe,bkhe->bhqk",
+                        do, vs.astype(jnp.float32))
+        ds = p * (dp - delta[..., None]) * scale_v
+        dq_acc = dq_acc + jnp.einsum(sk_eq, ds, ks.astype(jnp.float32))
+        dk_i = jnp.einsum(dk_eq, ds, qf)
+        dv_i = jnp.einsum("bhqk,bqhe->bke" if shared_kv else
+                          "bhqk,bqhe->bkhe", p, do)
+        return dq_acc, (dk_i, dv_i)
+
+    dq0 = jnp.zeros((b, sq, h, hd), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, jnp.arange(nkv))
+    dk = jnp.moveaxis(dks, 0, 1).reshape(*k.shape)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(*v.shape)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+flash_attention_ref.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 WKV oracle (sequential recurrence, matches kernels/rwkv6.py)
+# ---------------------------------------------------------------------------
+
+
+def wkv6_ref(r, k, v, w, u, s0=None):
+    """Sequential WKV6.  r,k,v,w: (B,S,H,hd); u: (H,hd); s0: (B,H,hd,hd).
+    Returns (y: (B,S,H,hd), s_final)."""
+    b, s, h, hd = r.shape
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    s_init = (jnp.zeros((b, h, hd, hd), jnp.float32) if s0 is None
+              else s0.astype(jnp.float32))
+
+    def step(carry, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", rt, carry + u[None, :, :, None] * kv)
+        carry = wt[..., :, None] * carry + kv
+        return carry, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, wf))
+    s_fin, ys = jax.lax.scan(step, s_init, xs)
+    return jnp.moveaxis(ys, 0, 1), s_fin

@@ -1,0 +1,296 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the
+production mesh and extract the roofline inputs.
+
+MUST be run as a script/module (the XLA_FLAGS line above has to execute
+before any jax import anywhere in the process):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape train_4k --mesh single --out runs/dryrun
+
+Outputs one JSON per cell: per-device HLO FLOPs/bytes, collective bytes by
+kind, memory analysis, compile wall time.  launch/roofline.py turns these
+into EXPERIMENTS.md SS Roofline rows.
+"""
+
+import argparse
+import json
+import re
+import time
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.configs as configs
+from repro.configs.base import SHAPES
+from repro.distributed import sharding
+from repro.launch import mesh as mesh_mod
+from repro.launch.specs import build_cell
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f8e4m3fn|f8e5m2|bf16|f16|f32|f64|s8|s16|s32|s64|"
+                       r"u8|u16|u32|u64|pred)\[([0-9,]*)\]")
+_BYTES = {"pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+          "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+          "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8, "u64": 8}
+
+
+_OP_RE = re.compile(
+    r"\s(" + "|".join(COLLECTIVE_KINDS) + r")(-start|-done)?\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?(?:condition=(%[\w.\-]+).*?body=(%[\w.\-]+)"
+    r"|body=(%[\w.\-]+).*?condition=(%[\w.\-]+))")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?(%?[\w.\-]+)\s*\(", re.M)
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dtype, dims = m.groups()
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _BYTES[dtype]
+    return total
+
+
+def _split_computations(hlo_text: str) -> dict[str, str]:
+    """name -> body text, for every computation in the module."""
+    comps: dict[str, str] = {}
+    name = None
+    buf: list[str] = []
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace() and "{" in line and "(" in line:
+            m = _COMP_RE.match(line)
+            if m:
+                if name is not None:
+                    comps[name] = "\n".join(buf)
+                name = m.group(2)
+                buf = []
+                continue
+        if line.startswith("}"):
+            if name is not None:
+                comps[name] = "\n".join(buf)
+            name = None
+            buf = []
+            continue
+        if name is not None:
+            buf.append(line)
+    if name is not None:
+        comps[name] = "\n".join(buf)
+    return comps
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Collective bytes/counts by kind, with while-loop bodies (lax.scan
+    layers, sequence scans) multiplied by their trip counts — XLA's text
+    emits each body once, so a flat parse undercounts scanned models."""
+    comps = _split_computations(hlo_text)
+
+    def block_stats(body: str):
+        own_b = {k: 0 for k in COLLECTIVE_KINDS}
+        own_c = {k: 0 for k in COLLECTIVE_KINDS}
+        children: list[tuple[str, str]] = []  # (cond, body)
+        for line in body.splitlines():
+            stripped = line.strip()
+            if " = " not in stripped:
+                continue
+            rhs = stripped.split(" = ", 1)[1]
+            m = _OP_RE.search(rhs)
+            if m and m.group(2) != "-done":   # count start ops once
+                kind = m.group(1)
+                own_b[kind] += _shape_bytes(rhs[:m.start()])
+                own_c[kind] += 1
+            wm = _WHILE_RE.search(rhs)
+            if wm:
+                cond = wm.group(1) or wm.group(4)
+                wbody = wm.group(2) or wm.group(3)
+                children.append((cond, wbody))
+        return own_b, own_c, children
+
+    memo: dict[str, tuple[dict, dict]] = {}
+
+    def resolve(name: str) -> tuple[dict, dict]:
+        if name in memo:
+            return memo[name]
+        body = comps.get(name, "")
+        b, c, children = block_stats(body)
+        for cond_name, body_name in children:
+            consts = [int(x) for x in
+                      _CONST_RE.findall(comps.get(cond_name, ""))]
+            trip = max(consts) if consts else 1
+            cb, cc = resolve(body_name)
+            for k in COLLECTIVE_KINDS:
+                b[k] += trip * cb[k]
+                c[k] += trip * cc[k]
+        memo[name] = (b, c)
+        return b, c
+
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_RE.match(line)
+            entry = m.group(2) if m else None
+            break
+    if entry is None:
+        return {"bytes": {k: 0 for k in COLLECTIVE_KINDS},
+                "counts": {k: 0 for k in COLLECTIVE_KINDS}}
+    b, c = resolve(entry)
+    return {"bytes": b, "counts": c}
+
+
+def shardings_for(cell, mesh, fsdp: bool):
+    """Build in_shardings matching the cell's abstract args."""
+    ins = []
+    for i, arg in enumerate(cell.abstract_args):
+        leaves = jax.tree.leaves(arg)
+        if not leaves:
+            ins.append(None)
+            continue
+        # classify by position: arg0 = state/params, caches contain 'seg'
+        if i == 0:
+            ins.append(sharding.tree_shardings(arg, mesh, "param", fsdp=fsdp))
+        else:
+            paths = [sharding._path_str(p) for p, _ in
+                     jax.tree_util.tree_flatten_with_path(arg)[0]]
+            if any("seg" in p for p in paths):
+                ins.append(sharding.tree_shardings(arg, mesh, "cache"))
+            else:
+                ins.append(sharding.batch_shardings(arg, mesh))
+    return tuple(ins)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, fsdp: bool,
+             out_dir: str | None, reduced: bool = False,
+             act_shard: bool = False, seq_parallel: bool = False,
+             remat: str = "full", kv_fp8: bool = False,
+             tag: str = "") -> dict:
+    cfg = configs.get(arch, reduced=reduced)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        rec = {"arch": arch, "shape": shape_name,
+               "mesh": "multi" if multi_pod else "single",
+               "status": "skipped(full-attention)"}
+        _emit(rec, out_dir, tag)
+        return rec
+
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    if act_shard:
+        sharding.enable_activation_sharding(mesh, seq_parallel=seq_parallel)
+    import jax.numpy as jnp
+    import repro.models.lm as _lm
+    _orig_build = _lm.build
+    if remat != "full" or kv_fp8:
+        def _build(cfg_):
+            m = _orig_build(cfg_)
+            m.remat = remat
+            if kv_fp8:
+                m.kv_cache_dtype = jnp.float8_e4m3fn
+            return m
+        _lm.build = _build
+    try:
+        cell = build_cell(cfg, shape)
+    finally:
+        _lm.build = _orig_build
+    in_sh = shardings_for(cell, mesh, fsdp)
+
+    t0 = time.time()
+    jitted = jax.jit(cell.step_fn, in_shardings=in_sh,
+                     donate_argnums=cell.donate)
+    lowered = jitted.lower(*cell.abstract_args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_rec = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception as e:  # noqa: BLE001 — backend-dependent API
+        mem_rec = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        cost_rec = {k: v for k, v in cost.items()
+                    if k in ("flops", "bytes accessed", "transcendentals")
+                    or k.startswith("bytes accessed")}
+    except Exception as e:  # noqa: BLE001
+        cost_rec = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    sharding.enable_activation_sharding(None)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "n_devices": mesh.size,
+        "fsdp": fsdp,
+        "act_shard": act_shard, "seq_parallel": seq_parallel,
+        "remat": remat, "kv_fp8": kv_fp8,
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem_rec,
+        "cost": cost_rec,
+        "collectives": coll,
+        "hlo_bytes": len(hlo),
+    }
+    _emit(rec, out_dir, tag)
+    return rec
+
+
+def _emit(rec: dict, out_dir: str | None, tag: str = ""):
+    line = (f"[{rec['arch']} x {rec['shape']} x {rec['mesh']}{tag}] "
+            f"{rec['status']}"
+            + (f" compile={rec.get('compile_s')}s "
+               f"flops={rec.get('cost', {}).get('flops')}"
+               if rec["status"] == "ok" else ""))
+    print(line, flush=True)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{tag}.json"
+        with open(os.path.join(out_dir, name), "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--fsdp", action="store_true", default=None)
+    ap.add_argument("--no-fsdp", dest="fsdp", action="store_false")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--act-shard", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--remat", default="full",
+                    choices=["full", "dots", "none"])
+    ap.add_argument("--kv-fp8", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="runs/dryrun")
+    args = ap.parse_args()
+    fsdp = args.fsdp
+    if fsdp is None:
+        fsdp = configs.get(args.arch).param_count() > 8e9
+    run_cell(args.arch, args.shape, args.mesh == "multi", fsdp, args.out,
+             reduced=args.reduced, act_shard=args.act_shard,
+             seq_parallel=args.seq_parallel, remat=args.remat,
+             kv_fp8=args.kv_fp8, tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

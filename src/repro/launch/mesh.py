@@ -1,0 +1,23 @@
+"""Production mesh builders.
+
+Functions (not module constants) so importing never touches jax device
+state.  Production target: TPU-v5e-class pods of 16x16 = 256 chips;
+multi-pod doubles along a leading `pod` axis (DP or pipeline across pods).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"))

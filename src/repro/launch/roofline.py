@@ -1,0 +1,112 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md SSRoofline).
+
+Per (arch x shape x mesh):
+
+    compute term    = FLOPs / (chips * peak_FLOP/s)
+    memory term     = HBM bytes / (chips * HBM_bw)
+    collective term = collective traffic / link_bw   (per device; links
+                      operate in parallel, so no further chip division)
+
+FLOPs/HBM bytes come from the analytic accounting (launch/flops.py) since
+XLA cost analysis counts scan bodies once; collective traffic comes from
+the compiled HLO with while-trip correction (launch/dryrun.py), converted
+to link-bytes with per-kind factors: an all-reduce moves ~2x its per-device
+operand over the links (reduce-scatter + all-gather phases), an all-gather/
+all-to-all/permute ~1x its per-device result, a reduce-scatter ~1x its
+input.  Dominant term = the bottleneck; fraction = compute / max(terms).
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline [--dir runs/dryrun]
+Writes runs/roofline.csv and prints the table.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import repro.configs as configs
+from repro.configs.base import SHAPES
+from repro.core.report import write_csv, markdown_table
+from repro.core.tech import TPU_V5E, TPU_ICI_BW
+from repro.launch import flops as flops_mod
+
+PEAK = TPU_V5E.peak_flops          # 197e12 bf16
+HBM_BW = TPU_V5E.dram_bw           # 819e9
+LINK_BW = TPU_ICI_BW               # 50e9/link
+
+# link-bytes per parsed result-byte, by collective kind
+COLL_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def analyze_record(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "mesh": rec["mesh"], "status": rec["status"]}
+    cfg = configs.get(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    acct = flops_mod.account(cfg, shape)
+    chips = rec["n_devices"]
+
+    t_compute = acct.flops / (chips * PEAK)
+    t_memory = acct.hbm_bytes / (chips * HBM_BW)
+    coll_link_bytes = sum(COLL_FACTOR[k] * v
+                          for k, v in rec["collectives"]["bytes"].items())
+    t_coll = coll_link_bytes / LINK_BW
+
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    t_bound = max(terms.values())
+    hlo_flops_once = rec["cost"].get("flops", 0.0) or 0.0
+    peak_gb = (rec["memory"].get("temp_bytes") or 0) \
+        + (rec["memory"].get("argument_bytes") or 0)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "status": "ok", "chips": chips,
+        "compute_s": t_compute, "memory_s": t_memory,
+        "collective_s": t_coll,
+        "dominant": dominant,
+        "roofline_frac": t_compute / t_bound if t_bound else 0.0,
+        "model_flops": acct.model_flops,
+        "analytic_flops": acct.flops,
+        "useful_ratio": acct.model_flops / acct.flops if acct.flops else 0.0,
+        "hlo_flops_per_dev_scan_once": hlo_flops_once,
+        "mem_per_dev_gb": peak_gb / 1e9,
+        "fits_16gb": peak_gb < 16e9,
+        "coll_gb": coll_link_bytes / 1e9,
+    }
+
+
+def load_dir(d: str) -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="runs/dryrun")
+    ap.add_argument("--out", default="runs/roofline.csv")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    rows = [r for r in (analyze_record(rec) for rec in load_dir(args.dir))
+            if r is not None]
+    if args.mesh:
+        rows = [r for r in rows if r.get("mesh") == args.mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    write_csv(args.out, rows)
+    shown = [{k: r.get(k) for k in
+              ("arch", "shape", "mesh", "dominant", "roofline_frac",
+               "compute_s", "memory_s", "collective_s", "mem_per_dev_gb",
+               "status")} for r in rows]
+    print(markdown_table(shown))
+    print(f"\nwrote {args.out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

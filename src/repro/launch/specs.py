@@ -1,0 +1,110 @@
+"""Abstract input specs (ShapeDtypeStruct) per (arch x shape) cell.
+
+Everything the dry-run lowers is built here without allocating: params and
+optimizer state via jax.eval_shape over the real init functions, inputs as
+ShapeDtypeStructs.  Modality frontends are stubs per the assignment: the
+Whisper cell feeds precomputed (B, frames, d_model) embeddings; Chameleon's
+VQ image tokens are ordinary vocab ids.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import lm as lm_mod
+from repro.optim import AdamWConfig, adamw_init, make_train_step
+from repro.optim.schedules import cosine, wsd
+
+
+def sds(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": sds((b, s)), "labels": sds((b, s))}
+    if cfg.encdec is not None:
+        batch["frames"] = sds((b, cfg.encdec.n_frames, cfg.d_model),
+                              jnp.bfloat16)
+    return batch
+
+
+def schedule_for(cfg: ArchConfig):
+    """MiniCPM trains with WSD (its paper's contribution); others cosine."""
+    if "minicpm" in cfg.name:
+        return partial(wsd, peak=1e-2, warmup=2000, total=100_000)
+    return partial(cosine, peak=3e-4, warmup=2000, total=100_000)
+
+
+@dataclasses.dataclass
+class Cell:
+    """One (arch x shape) lowering unit: step fn + abstract args."""
+
+    name: str
+    step_fn: object
+    abstract_args: tuple
+    donate: tuple = ()
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeSpec) -> Cell:
+    model = lm_mod.build(cfg)
+    key = jax.random.PRNGKey(0)
+
+    if shape.kind == "train":
+        batch = train_batch_specs(cfg, shape)
+        opt_cfg = AdamWConfig(schedule=schedule_for(cfg))
+        step = make_train_step(model.loss, opt_cfg)
+        state = jax.eval_shape(lambda: adamw_init(model.init(key)))
+        return Cell(f"{cfg.name}/{shape.name}", step, (state, batch),
+                    donate=(0,))
+
+    params = jax.eval_shape(lambda: model.init(key))
+    b, s = shape.global_batch, shape.seq_len
+
+    if shape.kind == "prefill":
+        cache = jax.eval_shape(lambda: model.init_cache(b, s))
+        tokens = sds((b, s))
+        if cfg.encdec is not None:
+            frames = sds((b, cfg.encdec.n_frames, cfg.d_model), jnp.bfloat16)
+
+            def prefill_fn(p, t, c, f):
+                return model.prefill(p, t, c, frames=f)
+            return Cell(f"{cfg.name}/{shape.name}", prefill_fn,
+                        (params, tokens, cache, frames), donate=(2,))
+
+        def prefill_fn(p, t, c):
+            return model.prefill(p, t, c)
+        return Cell(f"{cfg.name}/{shape.name}", prefill_fn,
+                    (params, tokens, cache), donate=(2,))
+
+    # decode: one new token against a cache of length seq_len
+    cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    tokens = sds((b, 1))
+    index = sds((), jnp.int32)
+    if cfg.encdec is not None:
+        enc = sds((b, cfg.encdec.n_frames, cfg.d_model), jnp.bfloat16)
+
+        def decode_fn(p, t, c, i, e):
+            return model.decode_step(p, t, c, i, enc_out=e)
+        return Cell(f"{cfg.name}/{shape.name}", decode_fn,
+                    (params, tokens, cache, index, enc), donate=(2,))
+
+    def decode_fn(p, t, c, i):
+        return model.decode_step(p, t, c, i)
+    return Cell(f"{cfg.name}/{shape.name}", decode_fn,
+                (params, tokens, cache, index), donate=(2,))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """Public helper (spec-mandated name): the model-input stand-ins."""
+    if shape.kind == "train":
+        return train_batch_specs(cfg, shape)
+    b = shape.global_batch
+    if shape.kind == "prefill":
+        return {"tokens": sds((b, shape.seq_len))}
+    return {"tokens": sds((b, 1)), "index": sds((), jnp.int32)}

@@ -1,0 +1,1 @@
+"""Model zoo: pure-JAX, scan-over-layers LM family implementations."""

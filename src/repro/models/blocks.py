@@ -1,0 +1,418 @@
+"""Architecture-specific blocks: MoE, MLA (+MTP), Mamba/hybrid, RWKV6.
+
+All blocks are pure functions over param pytrees, mesh-agnostic (sharding
+is applied by distributed/sharding.py), and written with einsum dispatch /
+lax.scan control flow so they lower to clean SPMD HLO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.layers import Params, truncated_normal
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts — GShard-style einsum dispatch (TPU-idiomatic)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEDims:
+    d_model: int
+    n_experts: int
+    top_k: int
+    d_expert: int
+    n_shared: int = 0           # shared (always-on) experts
+    group_size: int = 512       # tokens per dispatch group
+    capacity_factor: float = 1.25
+    router_bias: bool = True    # aux-loss-free bias (DeepSeek-V3 style)
+
+
+def init_moe(key, dims: MoEDims) -> Params:
+    kr, ke, ks = jax.random.split(key, 3)
+    d, e, f = dims.d_model, dims.n_experts, dims.d_expert
+    s_in, s_out = d ** -0.5, f ** -0.5
+    ke1, ke2, ke3 = jax.random.split(ke, 3)
+    p = {
+        "router": truncated_normal(kr, (d, e), s_in),
+        "wi_gate": truncated_normal(ke1, (e, d, f), s_in),
+        "wi_up": truncated_normal(ke2, (e, d, f), s_in),
+        "wo": truncated_normal(ke3, (e, f, d), s_out),
+    }
+    if dims.router_bias:
+        p["router_bias"] = jnp.zeros((e,), jnp.float32)
+    if dims.n_shared:
+        p["shared"] = layers.init_mlp(ks, d, dims.n_shared * f)
+    return p
+
+
+def moe(p: Params, dims: MoEDims, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Returns (out, aux_loss).  x: (B, S, d)."""
+    b, s, d = x.shape
+    t = b * s
+    g_size = dims.group_size
+    pad = (-t) % g_size
+    x_flat = x.reshape(t, d)
+    if pad:
+        x_flat = jnp.concatenate(
+            [x_flat, jnp.zeros((pad, d), x.dtype)], axis=0)
+    valid = (jnp.arange(t + pad) < t).astype(jnp.float32) \
+        .reshape(-1, g_size)                         # (G, S_g)
+    xg = x_flat.reshape(-1, g_size, d)               # (G, S_g, d)
+    logits = jnp.einsum("gsd,de->gse", xg, p["router"].astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    routed = probs
+    if "router_bias" in p:                           # bias only affects top-k
+        routed = probs + p["router_bias"]
+    gate_vals, expert_idx = jax.lax.top_k(routed, dims.top_k)  # (G,S,K)
+    gates = jnp.take_along_axis(probs, expert_idx, axis=-1)
+    gates = gates / (jnp.sum(gates, axis=-1, keepdims=True) + 1e-9)
+    gates = gates * valid[..., None]                 # padding takes no slots
+
+    e = dims.n_experts
+    cap = int(g_size * dims.top_k / e * dims.capacity_factor) + 1
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)   # (G,S,K,E)
+    onehot = onehot * valid[..., None, None]
+    # position of each (token, slot) within its expert's capacity buffer
+    pos = jnp.cumsum(onehot.reshape(onehot.shape[0], -1, e), axis=1)
+    pos = pos.reshape(onehot.shape) - 1.0                        # (G,S,K,E)
+    in_cap = pos < cap
+    combine = (gates[..., None] * onehot * in_cap)               # (G,S,K,E)
+    pos_idx = jnp.where(in_cap, pos, cap).astype(jnp.int32)      # (G,S,K,E)
+    cap_oh = jax.nn.one_hot(pos_idx, cap, dtype=x.dtype)         # (G,S,K,E,C)
+    combine_t = (combine.astype(x.dtype)[..., None] * cap_oh)    # (G,S,K,E,C)
+    combine_t = combine_t.sum(axis=2)                            # (G,S,E,C)
+    dispatch_t = (combine_t > 0).astype(x.dtype)
+
+    exp_in = jnp.einsum("gsec,gsd->egcd", dispatch_t, xg)        # (E,G,C,d)
+    gate_h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", exp_in,
+                                    p["wi_gate"].astype(x.dtype)))
+    up_h = jnp.einsum("egcd,edf->egcf", exp_in, p["wi_up"].astype(x.dtype))
+    exp_out = jnp.einsum("egcf,efd->egcd", gate_h * up_h,
+                         p["wo"].astype(x.dtype))
+    out = jnp.einsum("gsec,egcd->gsd", combine_t, exp_out)
+
+    # load-balance auxiliary loss (Switch-style fraction*prob)
+    frac = jnp.mean(onehot, axis=(1, 2))                          # (G,E)
+    mean_prob = jnp.mean(probs, axis=1)                           # (G,E)
+    aux = jnp.mean(jnp.sum(frac * mean_prob, axis=-1)) * e
+
+    out = out.reshape(t + pad, d)[:t].reshape(b, s, d)
+    if "shared" in p:
+        out = out + layers.mlp(p["shared"], x)
+    return out, aux.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Multi-head Latent Attention (DeepSeek-V3) + MTP head
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MLADims:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10000.0
+
+    @property
+    def qk_dim(self) -> int:
+        return self.qk_nope_dim + self.qk_rope_dim
+
+
+def init_mla(key, dims: MLADims) -> Params:
+    ks = jax.random.split(key, 8)
+    d, h = dims.d_model, dims.n_heads
+    r_q, r_kv = dims.q_lora_rank, dims.kv_lora_rank
+    return {
+        "wq_a": truncated_normal(ks[0], (d, r_q), d ** -0.5),
+        "q_norm": layers.init_rmsnorm(r_q),
+        "wq_b": truncated_normal(ks[1], (r_q, h, dims.qk_dim), r_q ** -0.5),
+        "wkv_a": truncated_normal(ks[2], (d, r_kv + dims.qk_rope_dim), d ** -0.5),
+        "kv_norm": layers.init_rmsnorm(r_kv),
+        "wk_b": truncated_normal(ks[3], (r_kv, h, dims.qk_nope_dim), r_kv ** -0.5),
+        "wv_b": truncated_normal(ks[4], (r_kv, h, dims.v_head_dim), r_kv ** -0.5),
+        "wo": truncated_normal(ks[5], (h, dims.v_head_dim, d),
+                               (h * dims.v_head_dim) ** -0.5),
+    }
+
+
+def mla_attention(p: Params, dims: MLADims, x: jax.Array,
+                  positions: jax.Array, *, kv_cache=None, cache_index=None):
+    """MLA with compressed-latent KV cache.  Cache = {"ckv": (B,S,r_kv),
+    "krope": (B,S,rope_dim)} — the memory win vs vanilla GQA.  Decode uses
+    the absorbed-matmul form (attend directly in latent space)."""
+    b, s, _ = x.shape
+    scale = dims.qk_dim ** -0.5
+    q_lat = layers.rmsnorm(p["q_norm"],
+                           jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(x.dtype)))
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, p["wq_b"].astype(x.dtype))
+    q_nope, q_rope = q[..., :dims.qk_nope_dim], q[..., dims.qk_nope_dim:]
+    q_rope = layers.apply_rope(q_rope, positions, dims.rope_theta)
+
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(x.dtype))
+    ckv_new = layers.rmsnorm(p["kv_norm"], kv_a[..., :dims.kv_lora_rank])
+    krope_new = layers.apply_rope(kv_a[..., dims.kv_lora_rank:][:, :, None, :],
+                                  positions, dims.rope_theta)[:, :, 0, :]
+
+    new_cache = None
+    if kv_cache is not None:
+        ckv = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache["ckv"], ckv_new.astype(kv_cache["ckv"].dtype), cache_index, 1)
+        krope = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache["krope"], krope_new.astype(kv_cache["krope"].dtype),
+            cache_index, 1)
+        new_cache = {"ckv": ckv, "krope": krope}
+        q_offset = cache_index
+    else:
+        ckv, krope = ckv_new, krope_new
+        q_offset = 0
+
+    # absorbed form: q_nope -> latent space, attend against ckv directly.
+    # Keys/values stay SHARED across heads (one latent stream) — the MLA
+    # memory saving; the flash path understands the single-kv-head layout.
+    q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope, p["wk_b"].astype(x.dtype))
+    q_eff = jnp.concatenate([q_abs, q_rope], axis=-1)        # (B,S,H,r+rope)
+    k_eff = jnp.concatenate([ckv, krope], axis=-1)[:, :, None, :]
+    v_eff = ckv[:, :, None, :]
+    if q_eff.shape[1] == 1 or q_eff.shape[1] < 2048:
+        logits = jnp.einsum("bqhr,bkr->bhqk", q_eff, k_eff[:, :, 0, :],
+                            preferred_element_type=jnp.float32) * scale
+        sq, skv = q.shape[1], ckv.shape[1]
+        q_pos = jnp.arange(sq) + q_offset
+        mask = q_pos[:, None] >= jnp.arange(skv)[None, :]
+        logits = jnp.where(mask, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        ctx_lat = jnp.einsum("bhqk,bkr->bqhr", probs, ckv)
+    else:
+        from repro.kernels import ops as kops
+        ctx_lat = kops.attention(q_eff, k_eff, v_eff, causal=True,
+                                 q_offset=q_offset, scale=scale,
+                                 force="ref").astype(x.dtype)
+    v = jnp.einsum("bqhr,rhd->bqhd", ctx_lat, p["wv_b"].astype(x.dtype))
+    out = jnp.einsum("bqhd,hdo->bqo", v, p["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+def init_mla_cache(batch: int, max_seq: int, dims: MLADims,
+                   dtype=jnp.bfloat16) -> Params:
+    return {"ckv": jnp.zeros((batch, max_seq, dims.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, max_seq, dims.qk_rope_dim), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Selective SSM (Mamba-style) + Hymba parallel attn/SSM block
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMDims:
+    d_model: int
+    d_inner: int
+    state_dim: int = 16
+    conv_k: int = 4
+    dt_rank: int = 0  # 0 -> d_model // 16
+
+    @property
+    def dtr(self) -> int:
+        return self.dt_rank or max(1, self.d_model // 16)
+
+
+def init_ssm(key, dims: SSMDims) -> Params:
+    ks = jax.random.split(key, 7)
+    d, di, n = dims.d_model, dims.d_inner, dims.state_dim
+    return {
+        "in_proj": truncated_normal(ks[0], (d, 2 * di), d ** -0.5),
+        "conv": truncated_normal(ks[1], (dims.conv_k, di), 0.5),
+        "x_proj": truncated_normal(ks[2], (di, dims.dtr + 2 * n), di ** -0.5),
+        "dt_proj": truncated_normal(ks[3], (dims.dtr, di), dims.dtr ** -0.5),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                  (di, 1))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": truncated_normal(ks[4], (di, d), di ** -0.5),
+    }
+
+
+def ssm(p: Params, dims: SSMDims, x: jax.Array, *, state=None):
+    """Selective scan.  state (decode): {"conv": (B,K-1,di), "h": (B,di,N)}.
+    Returns (out, new_state_or_None)."""
+    b, s, _ = x.shape
+    di, n = dims.d_inner, dims.state_dim
+    ux, z = jnp.split(jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype)),
+                      2, axis=-1)
+    # depthwise causal conv
+    if state is not None:
+        conv_in = jnp.concatenate([state["conv"].astype(ux.dtype), ux], axis=1)
+        new_conv = conv_in[:, -(dims.conv_k - 1):, :]
+    else:
+        pad = jnp.zeros((b, dims.conv_k - 1, di), ux.dtype)
+        conv_in = jnp.concatenate([pad, ux], axis=1)
+        new_conv = conv_in[:, -(dims.conv_k - 1):, :]
+    kern = p["conv"].astype(ux.dtype)
+    u = sum(conv_in[:, i:i + s, :] * kern[i] for i in range(dims.conv_k))
+    u = jax.nn.silu(u)
+
+    proj = jnp.einsum("bse,ef->bsf", u, p["x_proj"].astype(u.dtype))
+    dt = jax.nn.softplus(jnp.einsum(
+        "bsr,re->bse", proj[..., :dims.dtr], p["dt_proj"].astype(u.dtype))
+        .astype(jnp.float32))                                    # (B,S,di)
+    bmat = proj[..., dims.dtr:dims.dtr + n].astype(jnp.float32)  # (B,S,N)
+    cmat = proj[..., dims.dtr + n:].astype(jnp.float32)          # (B,S,N)
+    a = -jnp.exp(p["a_log"])                                     # (di,N)
+
+    decay = jnp.exp(dt[..., None] * a)                           # (B,S,di,N)
+    drive = (dt * u.astype(jnp.float32))[..., None] * bmat[:, :, None, :]
+
+    h0 = (state["h"].astype(jnp.float32) if state is not None
+          else jnp.zeros((b, di, n), jnp.float32))
+
+    def step(h, inp):
+        dec, drv, c = inp
+        h = dec * h + drv
+        y = jnp.einsum("bdn,bn->bd", h, c)
+        return h, y
+
+    xs = (jnp.moveaxis(decay, 1, 0), jnp.moveaxis(drive, 1, 0),
+          jnp.moveaxis(cmat, 1, 0))
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(u.dtype)                   # (B,S,di)
+    y = y + u * p["d_skip"].astype(u.dtype)
+    out = jnp.einsum("bse,ed->bsd", y * jax.nn.silu(z),
+                     p["out_proj"].astype(x.dtype))
+    new_state = {"conv": new_conv.astype(jnp.bfloat16),
+                 "h": h_last.astype(jnp.bfloat16)}
+    return out, new_state
+
+
+def init_ssm_state(batch: int, dims: SSMDims) -> Params:
+    return {"conv": jnp.zeros((batch, dims.conv_k - 1, dims.d_inner),
+                              jnp.bfloat16),
+            "h": jnp.zeros((batch, dims.d_inner, dims.state_dim),
+                           jnp.bfloat16)}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch): time-mix with data-dependent decay + channel-mix
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVDims:
+    d_model: int
+    n_heads: int           # head_dim = d_model // n_heads
+    d_ff: int
+    decay_lora: int = 64
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def init_rwkv_tmix(key, dims: RWKVDims) -> Params:
+    ks = jax.random.split(key, 8)
+    d = dims.d_model
+    s = d ** -0.5
+    return {
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_v": jnp.full((d,), 0.5, jnp.float32),
+        "mu_w": jnp.full((d,), 0.5, jnp.float32),
+        "wr": truncated_normal(ks[0], (d, d), s),
+        "wk": truncated_normal(ks[1], (d, d), s),
+        "wv": truncated_normal(ks[2], (d, d), s),
+        "wg": truncated_normal(ks[3], (d, d), s),
+        "w0": jnp.full((d,), -5.0, jnp.float32),
+        "w_lora_a": truncated_normal(ks[4], (d, dims.decay_lora), s),
+        "w_lora_b": truncated_normal(ks[5], (dims.decay_lora, d),
+                                     dims.decay_lora ** -0.5),
+        "bonus": jnp.zeros((dims.n_heads, dims.head_dim), jnp.float32),
+        "ln_out": layers.init_rmsnorm(d),
+        "wo": truncated_normal(ks[6], (d, d), s),
+    }
+
+
+def rwkv_tmix(p: Params, dims: RWKVDims, x: jax.Array, *, state=None):
+    """WKV6 recurrence.  state: {"last_x": (B,d), "s": (B,H,hd,hd)}."""
+    b, s_len, d = x.shape
+    h, hd = dims.n_heads, dims.head_dim
+    last_x = (state["last_x"].astype(x.dtype) if state is not None
+              else jnp.zeros((b, d), x.dtype))
+    x_prev = jnp.concatenate([last_x[:, None, :], x[:, :-1, :]], axis=1)
+
+    def mix(mu):
+        return x + (x_prev - x) * mu.astype(x.dtype)
+
+    r = jnp.einsum("bsd,de->bse", mix(p["mu_r"]), p["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", mix(p["mu_k"]), p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", mix(p["mu_v"]), p["wv"].astype(x.dtype))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", x, p["wg"].astype(x.dtype)))
+    # data-dependent decay (the Finch contribution)
+    w_in = mix(p["mu_w"]).astype(jnp.float32)
+    w = p["w0"] + jnp.einsum("bsd,dr,re->bse", w_in, p["w_lora_a"],
+                             p["w_lora_b"])
+    w = jnp.exp(-jnp.exp(w))                                     # (B,S,d)
+
+    rh = r.reshape(b, s_len, h, hd).astype(jnp.float32)
+    kh = k.reshape(b, s_len, h, hd).astype(jnp.float32)
+    vh = v.reshape(b, s_len, h, hd).astype(jnp.float32)
+    wh = w.reshape(b, s_len, h, hd)
+    u = p["bonus"]                                               # (H,hd)
+
+    s0 = (state["s"].astype(jnp.float32) if state is not None
+          else jnp.zeros((b, h, hd, hd), jnp.float32))
+
+    def step(s_carry, inp):
+        rt, kt, vt, wt = inp                                     # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]                 # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s_carry + u[None, :, :, None] * kv)
+        s_new = wt[..., :, None] * s_carry + kv
+        return s_new, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rh, kh, vh, wh))
+    s_last, ys = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s_len, d).astype(x.dtype)
+    y = layers.rmsnorm(p["ln_out"], y) * g
+    out = jnp.einsum("bsd,de->bse", y, p["wo"].astype(x.dtype))
+    new_state = {"last_x": x[:, -1, :].astype(jnp.bfloat16),
+                 "s": s_last.astype(jnp.bfloat16)}
+    return out, new_state
+
+
+def init_rwkv_cmix(key, dims: RWKVDims) -> Params:
+    k1, k2 = jax.random.split(key)
+    d = dims.d_model
+    return {
+        "mu": jnp.full((d,), 0.5, jnp.float32),
+        "wk": truncated_normal(k1, (d, dims.d_ff), d ** -0.5),
+        "wv": truncated_normal(k2, (dims.d_ff, d), dims.d_ff ** -0.5),
+    }
+
+
+def rwkv_cmix(p: Params, dims: RWKVDims, x: jax.Array, *, state=None):
+    b, s_len, d = x.shape
+    last_x = (state["last_x"].astype(x.dtype) if state is not None
+              else jnp.zeros((b, d), x.dtype))
+    x_prev = jnp.concatenate([last_x[:, None, :], x[:, :-1, :]], axis=1)
+    xm = x + (x_prev - x) * p["mu"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(
+        jnp.einsum("bsd,df->bsf", xm, p["wk"].astype(x.dtype))))
+    out = jnp.einsum("bsf,fd->bsd", k, p["wv"].astype(x.dtype))
+    return out, {"last_x": x[:, -1, :].astype(jnp.bfloat16)}
+
+
+def init_rwkv_state(batch: int, dims: RWKVDims) -> Params:
+    return {
+        "tmix": {"last_x": jnp.zeros((batch, dims.d_model), jnp.bfloat16),
+                 "s": jnp.zeros((batch, dims.n_heads, dims.head_dim,
+                                 dims.head_dim), jnp.bfloat16)},
+        "cmix": {"last_x": jnp.zeros((batch, dims.d_model), jnp.bfloat16)},
+    }

@@ -1,0 +1,326 @@
+"""Shared transformer layers: norms, RoPE, GQA attention, gated MLPs.
+
+Conventions:
+  * params are nested dicts of jnp arrays; init_* return (params, ...).
+  * activations are bf16 by default, params fp32 master + bf16 compute
+    (cast at use); all einsum contractions accumulate in fp32 where it
+    matters (attention logits, norms).
+  * `sharding hints` are applied by the caller (distributed/sharding.py)
+    via named-sharding on params and with_sharding_constraint on
+    activations — layers stay mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+
+
+def truncated_normal(key, shape, scale, dtype=jnp.float32):
+    return jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype) * scale
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * p["scale"]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    freqs = rope_freqs(x.shape[-1], theta)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (.., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional qk-norm / sliding window / KV cache decode)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    window: int | None = None      # sliding-window size (None = global)
+    softmax_scale: float | None = None
+
+
+def init_attention(key, dims: AttnDims) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, h, kvh, hd = dims.d_model, dims.n_heads, dims.n_kv_heads, dims.head_dim
+    s = d ** -0.5
+    p = {
+        "wq": truncated_normal(kq, (d, h, hd), s),
+        "wk": truncated_normal(kk, (d, kvh, hd), s),
+        "wv": truncated_normal(kv, (d, kvh, hd), s),
+        "wo": truncated_normal(ko, (h, hd, d), (h * hd) ** -0.5),
+    }
+    if dims.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd)
+        p["k_norm"] = init_rmsnorm(hd)
+    return p
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B,S,KV,hd) -> (B,S,H,hd) by repeating groups (GQA)."""
+    reps = n_heads // k.shape[-2]
+    if reps == 1:
+        return k
+    return jnp.repeat(k, reps, axis=-2)
+
+
+def attention_scores(q, k, v, *, causal: bool, window: int | None,
+                     q_offset: jax.Array | int = 0,
+                     k_positions: jax.Array | None = None,
+                     scale: float | None = None) -> jax.Array:
+    """Reference SDPA used for training/prefill (and as kernels/ref oracle).
+
+    q: (B,Sq,H,hd); k,v: (B,Skv,H,hd).  q_offset positions q within kv;
+    k_positions overrides the absolute key positions (ring-buffer decode:
+    -1 marks an unwritten slot).
+    """
+    hd = q.shape[-1]
+    scale = hd ** -0.5 if scale is None else scale
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    sq, skv = q.shape[1], k.shape[1]
+    q_pos = jnp.arange(sq) + q_offset
+    k_pos = jnp.arange(skv) if k_positions is None else k_positions
+    mask = k_pos[None, :] >= 0
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask = mask & (q_pos[:, None] - k_pos[None, :] < window)
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _grouped_decode_attention(q, ck, cv, *, cache_index, window,
+                              scale=None):
+    """Single-token GQA decode WITHOUT expanding kv to query heads.
+
+    Expanding via jnp.repeat forces GSPMD to all-gather the whole (possibly
+    sequence-sharded) cache every step — the dominant decode collective in
+    the baseline dry-runs.  The grouped einsum keeps the cache sharded; the
+    softmax/PV reductions over the sharded seq dim lower to all-reduces of
+    the (tiny) per-head outputs instead.
+    q: (B,1,H,hd); ck/cv: (B,S,KV,hd).
+    """
+    b, _, h, hd = q.shape
+    skv, g = ck.shape[1], ck.shape[2]
+    rep = h // g
+    scale = hd ** -0.5 if scale is None else scale
+    qg = q.reshape(b, 1, g, rep, hd)
+    logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, ck,
+                        preferred_element_type=jnp.float32) * scale
+    k_pos = jnp.arange(skv)
+    mask = k_pos <= cache_index
+    if window is not None:
+        mask &= cache_index - k_pos < window
+    logits = jnp.where(mask[None, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, cv)
+    return out.reshape(b, 1, h, hd)
+
+
+def attention(p: Params, dims: AttnDims, x: jax.Array, positions: jax.Array,
+              *, causal: bool = True, kv_cache=None, cache_index=None):
+    """Full attention op.  Training/prefill when kv_cache is None; decode
+    (x is (B,1,d)) when a cache dict {"k","v"} and fill index are given.
+
+    Returns (out, new_kv_cache_or_None).
+    """
+    from repro.distributed.sharding import constrain
+    b, s, _ = x.shape
+    q = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype)),
+                  "heads")
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if dims.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    q = apply_rope(q, positions, dims.rope_theta)
+    k = apply_rope(k, positions, dims.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None and s == 1:
+        span = kv_cache["k"].shape[1]
+        ring = "pos" in kv_cache
+        if ring:
+            slot = jnp.mod(cache_index, span)
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["k"], k.astype(kv_cache["k"].dtype), slot, 1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["v"], v.astype(kv_cache["v"].dtype), slot, 1)
+            pos = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["pos"], jnp.full((1,), cache_index, jnp.int32),
+                slot, 0)
+            new_cache = {"k": ck, "v": cv, "pos": pos}
+            out = attention_scores(
+                q, _expand_kv(ck.astype(q.dtype), dims.n_heads),
+                _expand_kv(cv.astype(q.dtype), dims.n_heads),
+                causal=True, window=dims.window, q_offset=cache_index,
+                k_positions=pos, scale=dims.softmax_scale)
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["k"], k.astype(kv_cache["k"].dtype), cache_index, 1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["v"], v.astype(kv_cache["v"].dtype), cache_index, 1)
+            new_cache = {"k": ck, "v": cv}
+            out = _grouped_decode_attention(
+                q, ck.astype(q.dtype), cv.astype(q.dtype),
+                cache_index=cache_index, window=dims.window,
+                scale=dims.softmax_scale)
+    else:
+        # training / single-shot prefill: attend within the chunk, then
+        # store the trailing window (or whole chunk) into the cache.
+        # Long sequences dispatch to the flash kernel path (Pallas on TPU,
+        # chunked custom-VJP ref elsewhere) — O(S*block) live logits.
+        from repro.kernels import ops as kops
+        out = kops.attention(
+            q, constrain(_expand_kv(k, dims.n_heads), "heads"),
+            constrain(_expand_kv(v, dims.n_heads), "heads"),
+            causal=causal, window=dims.window, q_offset=cache_index or 0,
+            scale=dims.softmax_scale)
+        out = constrain(out, "heads")
+        if kv_cache is not None:
+            span = kv_cache["k"].shape[1]
+            base = cache_index if cache_index is not None else 0
+            if "pos" in kv_cache:   # ring buffer: keep the last `span` keys
+                keep = min(s, span)
+                idx = jnp.mod(base + s - keep + jnp.arange(keep), span)
+                ck = kv_cache["k"].at[:, idx].set(
+                    k[:, -keep:].astype(kv_cache["k"].dtype))
+                cv = kv_cache["v"].at[:, idx].set(
+                    v[:, -keep:].astype(kv_cache["v"].dtype))
+                pos = kv_cache["pos"].at[idx].set(
+                    (base + s - keep + jnp.arange(keep)).astype(jnp.int32))
+                new_cache = {"k": ck, "v": cv, "pos": pos}
+            else:
+                ck = jax.lax.dynamic_update_slice_in_dim(
+                    kv_cache["k"], k.astype(kv_cache["k"].dtype), base, 1)
+                cv = jax.lax.dynamic_update_slice_in_dim(
+                    kv_cache["v"], v.astype(kv_cache["v"].dtype), base, 1)
+                new_cache = {"k": ck, "v": cv}
+    out = constrain(jnp.einsum("bshk,hkd->bsd", out,
+                               p["wo"].astype(x.dtype)), "residual")
+    return out, new_cache
+
+
+def init_kv_cache(batch: int, max_seq: int, dims: AttnDims,
+                  dtype=jnp.bfloat16) -> Params:
+    """KV cache; sliding-window dims get a ring buffer of `window` slots
+    plus an absolute-position array (-1 = unwritten)."""
+    span = max_seq if dims.window is None else min(max_seq, dims.window)
+    shape = (batch, span, dims.n_kv_heads, dims.head_dim)
+    cache = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if dims.window is not None and span < max_seq:
+        cache["pos"] = jnp.full((span,), -1, jnp.int32)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Gated MLPs (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = d_model ** -0.5, d_ff ** -0.5
+    return {
+        "wi_gate": truncated_normal(k1, (d_model, d_ff), s_in),
+        "wi_up": truncated_normal(k2, (d_model, d_ff), s_in),
+        "wo": truncated_normal(k3, (d_ff, d_model), s_out),
+    }
+
+
+def mlp(p: Params, x: jax.Array, activation: str = "silu") -> jax.Array:
+    from repro.distributed.sharding import constrain
+    act = {"silu": jax.nn.silu, "gelu": partial(jax.nn.gelu, approximate=True)}[activation]
+    gate = act(constrain(jnp.einsum("bsd,df->bsf", x,
+                                    p["wi_gate"].astype(x.dtype)), "hidden"))
+    up = constrain(jnp.einsum("bsd,df->bsf", x, p["wi_up"].astype(x.dtype)),
+                   "hidden")
+    return constrain(jnp.einsum("bsf,fd->bsd", gate * up,
+                                p["wo"].astype(x.dtype)), "residual")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, vocab: int, d_model: int, tied: bool = True) -> Params:
+    p = {"table": truncated_normal(key, (vocab, d_model), d_model ** -0.5)}
+    if not tied:
+        p["unembed"] = truncated_normal(
+            jax.random.fold_in(key, 1), (d_model, vocab), d_model ** -0.5)
+    return p
+
+
+def embed(p: Params, tokens: jax.Array, scale: float = 1.0,
+          dtype=jnp.bfloat16) -> jax.Array:
+    x = p["table"].astype(dtype)[tokens]
+    return x * jnp.asarray(scale, dtype)
+
+
+def unembed(p: Params, x: jax.Array, cap: float | None = None) -> jax.Array:
+    table = p.get("unembed")
+    if table is None:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["table"].astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, table.astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+    if cap is not None:
+        logits = cap * jnp.tanh(logits / cap)
+    return logits
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  z_loss: float = 1e-4) -> jax.Array:
+    """Mean token cross-entropy with an optional z-loss regularizer."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = logz - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(logz)
+    return jnp.mean(loss)

@@ -1,0 +1,501 @@
+"""LM assembly: layer plans, scan-over-layers, train/prefill/decode.
+
+Every architecture is a sequence of *segments*; a segment is `count`
+identical blocks whose params are stacked on a leading layer axis and
+applied with `jax.lax.scan` (compact HLO, fast compiles at 512-way SPMD).
+Heterogeneous architectures (leading dense layers in DeepSeek MoEs, the
+three global-attention layers in Hymba) are expressed as multiple segments.
+
+Block kinds:
+  dense        pre-norm GQA attention + gated MLP
+  moe          pre-norm attention (GQA or MLA) + MoE FFN
+  hybrid       parallel attention/SSM heads (Hymba), SWA or global
+  rwkv         RWKV6 time-mix + channel-mix
+  encoder      non-causal dense block (Whisper encoder)
+  crossdec     causal self-attn + cross-attn + MLP (Whisper decoder)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import blocks, layers
+from repro.models.layers import AttnDims, Params
+
+# ---------------------------------------------------------------------------
+# Layer plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kind: str
+    count: int
+    window: int | None = None   # sliding window for hybrid SWA segments
+
+
+def layer_plan(cfg: ArchConfig) -> tuple[Segment, ...]:
+    if cfg.encdec is not None:
+        return (Segment("crossdec", cfg.n_layers),)
+    if cfg.rwkv:
+        return (Segment("rwkv", cfg.n_layers),)
+    if cfg.ssm is not None:   # Hymba hybrid: split on global-attn layers
+        segs: list[Segment] = []
+        glb = set(cfg.ssm.global_attn_layers)
+        i = 0
+        while i < cfg.n_layers:
+            if i in glb:
+                segs.append(Segment("hybrid", 1, window=None))
+                i += 1
+            else:
+                j = i
+                while j < cfg.n_layers and j not in glb:
+                    j += 1
+                segs.append(Segment("hybrid", j - i,
+                                    window=cfg.ssm.sliding_window))
+                i = j
+        return tuple(segs)
+    if cfg.moe is not None:
+        segs = []
+        if cfg.moe.first_dense_layers:
+            segs.append(Segment("dense_lead", cfg.moe.first_dense_layers))
+        segs.append(Segment("moe", cfg.n_layers - cfg.moe.first_dense_layers))
+        return tuple(segs)
+    return (Segment("dense", cfg.n_layers),)
+
+
+# ---------------------------------------------------------------------------
+# Dim helpers
+# ---------------------------------------------------------------------------
+
+
+def attn_dims(cfg: ArchConfig, window: int | None = None) -> AttnDims:
+    return AttnDims(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                    n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                    qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
+                    window=window)
+
+
+def moe_dims(cfg: ArchConfig) -> blocks.MoEDims:
+    m = cfg.moe
+    return blocks.MoEDims(d_model=cfg.d_model, n_experts=m.n_experts,
+                          top_k=m.top_k, d_expert=m.d_expert,
+                          n_shared=m.n_shared, group_size=m.group_size,
+                          capacity_factor=m.capacity_factor)
+
+
+def mla_dims(cfg: ArchConfig) -> blocks.MLADims:
+    m = cfg.mla
+    return blocks.MLADims(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                          q_lora_rank=m.q_lora_rank, kv_lora_rank=m.kv_lora_rank,
+                          qk_nope_dim=m.qk_nope_dim, qk_rope_dim=m.qk_rope_dim,
+                          v_head_dim=m.v_head_dim, rope_theta=cfg.rope_theta)
+
+
+def ssm_dims(cfg: ArchConfig) -> blocks.SSMDims:
+    return blocks.SSMDims(d_model=cfg.d_model, d_inner=cfg.d_model,
+                          state_dim=cfg.ssm.state_dim, conv_k=cfg.ssm.conv_k)
+
+
+def rwkv_dims(cfg: ArchConfig) -> blocks.RWKVDims:
+    return blocks.RWKVDims(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                           d_ff=cfg.d_ff)
+
+
+# ---------------------------------------------------------------------------
+# Per-block init / apply
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ArchConfig, seg: Segment) -> Params:
+    ka, kf, kx = jax.random.split(key, 3)
+    d = cfg.d_model
+    p: Params = {"ln_attn": layers.init_rmsnorm(d),
+                 "ln_mlp": layers.init_rmsnorm(d)}
+    if seg.kind == "rwkv":
+        return {"ln_tmix": layers.init_rmsnorm(d),
+                "ln_cmix": layers.init_rmsnorm(d),
+                "tmix": blocks.init_rwkv_tmix(ka, rwkv_dims(cfg)),
+                "cmix": blocks.init_rwkv_cmix(kf, rwkv_dims(cfg))}
+    if cfg.mla is not None and seg.kind in ("moe", "dense_lead"):
+        p["attn"] = blocks.init_mla(ka, mla_dims(cfg))
+    else:
+        p["attn"] = layers.init_attention(ka, attn_dims(cfg, seg.window))
+    if seg.kind == "moe":
+        p["ffn"] = blocks.init_moe(kf, moe_dims(cfg))
+    elif seg.kind == "dense_lead":
+        p["ffn"] = layers.init_mlp(kf, d, cfg.moe.dense_d_ff)
+    elif seg.kind == "crossdec":
+        p["ffn"] = layers.init_mlp(kf, d, cfg.d_ff)
+        p["ln_cross"] = layers.init_rmsnorm(d)
+        p["cross"] = layers.init_attention(kx, attn_dims(cfg))
+    else:
+        p["ffn"] = layers.init_mlp(kf, d, cfg.d_ff)
+    if seg.kind == "hybrid":
+        p["ssm"] = blocks.init_ssm(kx, ssm_dims(cfg))
+        p["ln_attn_out"] = layers.init_rmsnorm(d)
+        p["ln_ssm_out"] = layers.init_rmsnorm(d)
+    return p
+
+
+def _apply_block(lp: Params, cfg: ArchConfig, seg: Segment, x: jax.Array,
+                 positions: jax.Array, *, causal: bool = True,
+                 cache=None, cache_index=None, cross_ctx=None):
+    """Returns (x, aux_loss, new_cache)."""
+    from repro.distributed.sharding import constrain
+    x = constrain(x, "residual")   # pin the scan carry's layout
+    rs = jnp.asarray(cfg.residual_scale, x.dtype)
+    aux = jnp.zeros((), jnp.float32)
+
+    if seg.kind == "rwkv":
+        t_in = layers.rmsnorm(lp["ln_tmix"], x)
+        t_out, t_state = blocks.rwkv_tmix(
+            lp["tmix"], rwkv_dims(cfg), t_in,
+            state=None if cache is None else cache["tmix"])
+        x = x + t_out
+        c_in = layers.rmsnorm(lp["ln_cmix"], x)
+        c_out, c_state = blocks.rwkv_cmix(
+            lp["cmix"], rwkv_dims(cfg), c_in,
+            state=None if cache is None else cache["cmix"])
+        x = x + c_out
+        new_cache = None if cache is None else {"tmix": t_state,
+                                                "cmix": c_state}
+        return x, aux, new_cache
+
+    h = layers.rmsnorm(lp["ln_attn"], x)
+    new_cache = {} if cache is not None else None
+    if seg.kind == "hybrid":
+        attn_out, kvc = layers.attention(
+            lp["attn"], attn_dims(cfg, seg.window), h, positions,
+            causal=causal,
+            kv_cache=None if cache is None else cache["kv"],
+            cache_index=cache_index)
+        ssm_out, ssm_state = blocks.ssm(
+            lp["ssm"], ssm_dims(cfg), h,
+            state=None if cache is None else cache["ssm"])
+        mixed = 0.5 * (layers.rmsnorm(lp["ln_attn_out"], attn_out)
+                       + layers.rmsnorm(lp["ln_ssm_out"], ssm_out))
+        x = x + rs * mixed
+        if cache is not None:
+            new_cache = {"kv": kvc, "ssm": ssm_state}
+    elif cfg.mla is not None and seg.kind in ("moe", "dense_lead"):
+        attn_out, kvc = blocks.mla_attention(
+            lp["attn"], mla_dims(cfg), h, positions,
+            kv_cache=None if cache is None else cache["kv"],
+            cache_index=cache_index)
+        x = x + rs * attn_out
+        if cache is not None:
+            new_cache = {"kv": kvc}
+    else:
+        attn_out, kvc = layers.attention(
+            lp["attn"], attn_dims(cfg, seg.window), h, positions,
+            causal=causal,
+            kv_cache=None if cache is None else cache["kv"],
+            cache_index=cache_index)
+        x = x + rs * attn_out
+        if cache is not None:
+            new_cache = {"kv": kvc}
+
+    if seg.kind == "crossdec" and cross_ctx is not None:
+        hc = layers.rmsnorm(lp["ln_cross"], x)
+        cross_out = _cross_attention(lp["cross"], cfg, hc, cross_ctx)
+        x = x + rs * cross_out
+
+    h2 = layers.rmsnorm(lp["ln_mlp"], x)
+    if seg.kind == "moe":
+        ffn_out, aux = blocks.moe(lp["ffn"], moe_dims(cfg), h2)
+    else:
+        ffn_out = layers.mlp(lp["ffn"], h2, cfg.activation)
+    x = x + rs * ffn_out
+    return x, aux, new_cache
+
+
+def _cross_attention(p: Params, cfg: ArchConfig, x: jax.Array,
+                     ctx: jax.Array) -> jax.Array:
+    dims = attn_dims(cfg)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", ctx, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", ctx, p["wv"].astype(x.dtype))
+    out = layers.attention_scores(q, layers._expand_kv(k, dims.n_heads),
+                                  layers._expand_kv(v, dims.n_heads),
+                                  causal=False, window=None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def _init_block_cache(cfg: ArchConfig, seg: Segment, batch: int,
+                      max_seq: int, dtype=jnp.bfloat16) -> Params:
+    if seg.kind == "rwkv":
+        return blocks.init_rwkv_state(batch, rwkv_dims(cfg))
+    cache: Params = {}
+    if cfg.mla is not None and seg.kind in ("moe", "dense_lead"):
+        cache["kv"] = blocks.init_mla_cache(batch, max_seq, mla_dims(cfg),
+                                            dtype=dtype)
+    else:
+        cache["kv"] = layers.init_kv_cache(batch, max_seq,
+                                           attn_dims(cfg, seg.window),
+                                           dtype=dtype)
+    if seg.kind == "hybrid":
+        cache["ssm"] = blocks.init_ssm_state(batch, ssm_dims(cfg))
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+class LM:
+    """Decoder LM (all archs except Whisper, which subclasses).
+
+    `remat` controls per-layer activation checkpointing inside the layer
+    scan (training path only; serving never pays recompute):
+      "none"  — save everything (smallest compute, largest memory)
+      "dots"  — save matmul outputs only (jax dots_saveable)
+      "full"  — save nothing, recompute the block in backward (default:
+                 the memory floor that makes the 4k/32k cells fit HBM)
+    """
+
+    def __init__(self, cfg: ArchConfig, remat: str = "full",
+                 kv_cache_dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.remat = remat
+        # fp8 (e4m3) halves KV-cache HBM footprint and decode read traffic
+        # (SSPerf memory-term lever for decode cells); attention math still
+        # runs in bf16/f32 (cache values upcast on read).
+        self.kv_cache_dtype = kv_cache_dtype
+        self.plan = layer_plan(cfg)
+
+    def _maybe_remat(self, fn, has_cache: bool):
+        if has_cache or self.remat == "none":
+            return fn
+        policy = (jax.checkpoint_policies.dots_saveable
+                  if self.remat == "dots" else None)
+        return jax.checkpoint(fn, policy=policy)
+
+    # -- init ---------------------------------------------------------------
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        keys = jax.random.split(key, len(self.plan) + 3)
+        params: Params = {
+            "embed": layers.init_embed(keys[0], cfg.vocab, cfg.d_model,
+                                       tied=cfg.tied_embeddings),
+            "ln_f": layers.init_rmsnorm(cfg.d_model),
+        }
+        for i, seg in enumerate(self.plan):
+            seg_keys = jax.random.split(keys[i + 1], seg.count)
+            params[f"seg{i}"] = jax.vmap(
+                partial(_init_block, cfg=cfg, seg=seg))(seg_keys)
+        if cfg.mtp:
+            params["mtp"] = {
+                "proj": layers.truncated_normal(
+                    keys[-2], (2 * cfg.d_model, cfg.d_model),
+                    (2 * cfg.d_model) ** -0.5),
+                "block": _init_block(keys[-1], cfg,
+                                     Segment("dense_lead", 1)
+                                     if cfg.moe else Segment("dense", 1)),
+                "ln": layers.init_rmsnorm(cfg.d_model),
+            }
+        return params
+
+    # -- segments -----------------------------------------------------------
+
+    def _run_segment(self, seg_params, cfg, seg, x, positions, *,
+                     causal=True, cache=None, cache_index=None,
+                     cross_ctx=None):
+        """Scan `seg.count` stacked blocks; returns (x, aux, new_cache)."""
+        block = self._maybe_remat(
+            partial(_apply_block, cfg=cfg, seg=seg, causal=causal,
+                    cache_index=cache_index, cross_ctx=cross_ctx),
+            has_cache=cache is not None)
+
+        if seg.count == 1:
+            lp = jax.tree.map(lambda a: a[0], seg_params)
+            c = None if cache is None else jax.tree.map(lambda a: a[0], cache)
+            x, aux, nc = block(lp, x=x, positions=positions, cache=c)
+            nc = None if nc is None else jax.tree.map(
+                lambda a: a[None], nc)
+            return x, aux, nc
+
+        if cache is None:
+            def body_nocache(carry, lp):
+                xx, aux, _ = block(lp, x=carry, positions=positions,
+                                   cache=None)
+                return xx, aux
+            x, auxs = jax.lax.scan(body_nocache, x, seg_params)
+            return x, jnp.sum(auxs), None
+
+        def body(carry, xs):
+            lp, c = xs
+            xx, aux, nc = block(lp, x=carry, positions=positions, cache=c)
+            return xx, (aux, nc)
+
+        x, (auxs, new_cache) = jax.lax.scan(body, x, (seg_params, cache))
+        return x, jnp.sum(auxs), new_cache
+
+    # -- forward ------------------------------------------------------------
+
+    def forward(self, params: Params, tokens: jax.Array,
+                positions: jax.Array | None = None,
+                cache=None, cache_index=None):
+        """Returns (logits, aux, new_cache)."""
+        cfg = self.cfg
+        if positions is None:
+            base = 0 if cache_index is None else cache_index
+            positions = base + jnp.arange(tokens.shape[1])[None, :]
+        from repro.distributed.sharding import constrain
+        scale = cfg.d_model ** 0.5 if cfg.embed_scale_by_dim else 1.0
+        x = constrain(layers.embed(params["embed"], tokens, scale),
+                      "residual")
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches = {}
+        for i, seg in enumerate(self.plan):
+            c = None if cache is None else cache[f"seg{i}"]
+            x, aux, nc = self._run_segment(
+                params[f"seg{i}"], cfg, seg, x, positions,
+                cache=c, cache_index=cache_index)
+            x = constrain(x, "residual")
+            aux_total = aux_total + aux
+            if cache is not None:
+                new_caches[f"seg{i}"] = nc
+        x = layers.rmsnorm(params["ln_f"], x)
+        logits = layers.unembed(params["embed"], x,
+                                cap=cfg.logit_cap or None)
+        return logits, aux_total, (new_caches if cache is not None else None)
+
+    # -- losses -------------------------------------------------------------
+
+    def loss(self, params: Params, batch: dict) -> jax.Array:
+        """Next-token CE (+ MoE aux + MTP head when configured)."""
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        logits, aux, _ = self.forward(params, tokens)
+        loss = layers.cross_entropy(logits, labels)
+        if cfg.moe is not None:
+            loss = loss + 0.01 * aux
+        if cfg.mtp:
+            loss = loss + 0.3 * self._mtp_loss(params, tokens, labels)
+        return loss
+
+    def _mtp_loss(self, params, tokens, labels):
+        """DeepSeek-V3 MTP: predict t+2 from [h_t ; emb(label_t)]."""
+        cfg = self.cfg
+        mtp = params["mtp"]
+        scale = cfg.d_model ** 0.5 if cfg.embed_scale_by_dim else 1.0
+        x = layers.embed(params["embed"], tokens, scale)
+        lbl_emb = layers.embed(params["embed"], labels, scale)
+        h = jnp.concatenate([x, lbl_emb], axis=-1)
+        h = jnp.einsum("bsd,de->bse", h, mtp["proj"].astype(x.dtype))
+        positions = jnp.arange(tokens.shape[1])[None, :]
+        seg = Segment("dense_lead", 1) if cfg.moe else Segment("dense", 1)
+        h, _, _ = _apply_block(mtp["block"], cfg, seg, h, positions)
+        h = layers.rmsnorm(mtp["ln"], h)
+        logits = layers.unembed(params["embed"], h, cap=cfg.logit_cap or None)
+        # next-next-token targets
+        tgt = jnp.concatenate([labels[:, 1:], labels[:, -1:]], axis=1)
+        return layers.cross_entropy(logits, tgt)
+
+    # -- serving ------------------------------------------------------------
+
+    def init_cache(self, batch: int, max_seq: int) -> Params:
+        cache: Params = {}
+        for i, seg in enumerate(self.plan):
+            per_layer = [_init_block_cache(self.cfg, seg, batch, max_seq,
+                                           dtype=self.kv_cache_dtype)
+                         for _ in range(seg.count)]
+            cache[f"seg{i}"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *per_layer)
+        return cache
+
+    def prefill(self, params: Params, tokens: jax.Array, cache: Params):
+        logits, _, cache = self.forward(params, tokens, cache=cache,
+                                        cache_index=0)
+        return logits[:, -1:], cache
+
+    def decode_step(self, params: Params, tokens: jax.Array, cache: Params,
+                    index: jax.Array):
+        """tokens: (B, 1) — one decode step at absolute position `index`."""
+        logits, _, cache = self.forward(params, tokens, cache=cache,
+                                        cache_index=index)
+        return logits, cache
+
+
+class WhisperLM(LM):
+    """Encoder-decoder: encoder over stub frame embeddings + cross-attn
+    decoder.  Inputs carry `frames`: (B, n_frames, d_model)."""
+
+    def __init__(self, cfg: ArchConfig):
+        super().__init__(cfg)
+        self.enc_seg = Segment("dense", cfg.encdec.n_encoder_layers)
+
+    def init(self, key) -> Params:
+        k_dec, k_enc = jax.random.split(key)
+        params = super().init(k_dec)
+        seg_keys = jax.random.split(k_enc, self.enc_seg.count)
+        params["encoder"] = jax.vmap(
+            partial(_init_block, cfg=self.cfg, seg=self.enc_seg))(seg_keys)
+        params["ln_enc"] = layers.init_rmsnorm(self.cfg.d_model)
+        return params
+
+    def encode(self, params: Params, frames: jax.Array) -> jax.Array:
+        positions = jnp.arange(frames.shape[1])[None, :]
+        x, _, _ = self._run_segment(params["encoder"], self.cfg,
+                                    self.enc_seg, frames, positions,
+                                    causal=False)
+        return layers.rmsnorm(params["ln_enc"], x)
+
+    def forward(self, params: Params, tokens: jax.Array,
+                positions=None, cache=None, cache_index=None,
+                frames: jax.Array | None = None, enc_out=None):
+        cfg = self.cfg
+        if enc_out is None:
+            enc_out = self.encode(params, frames)
+        if positions is None:
+            base = 0 if cache_index is None else cache_index
+            positions = base + jnp.arange(tokens.shape[1])[None, :]
+        x = layers.embed(params["embed"], tokens)
+        aux = jnp.zeros((), jnp.float32)
+        new_caches = {}
+        for i, seg in enumerate(self.plan):
+            c = None if cache is None else cache[f"seg{i}"]
+            x, a, nc = self._run_segment(params[f"seg{i}"], cfg, seg, x,
+                                         positions, cache=c,
+                                         cache_index=cache_index,
+                                         cross_ctx=enc_out)
+            aux = aux + a
+            if cache is not None:
+                new_caches[f"seg{i}"] = nc
+        x = layers.rmsnorm(params["ln_f"], x)
+        logits = layers.unembed(params["embed"], x)
+        return logits, aux, (new_caches if cache is not None else None)
+
+    def loss(self, params: Params, batch: dict) -> jax.Array:
+        logits, _, _ = self.forward(params, batch["tokens"],
+                                    frames=batch["frames"])
+        return layers.cross_entropy(logits, batch["labels"])
+
+    def prefill(self, params, tokens, cache, frames=None):
+        logits, _, cache = self.forward(params, tokens, cache=cache,
+                                        cache_index=0, frames=frames)
+        return logits[:, -1:], cache
+
+    def decode_step(self, params, tokens, cache, index, enc_out=None,
+                    frames=None):
+        logits, _, cache = self.forward(params, tokens, cache=cache,
+                                        cache_index=index, frames=frames,
+                                        enc_out=enc_out)
+        return logits, cache
+
+
+def build(cfg: ArchConfig) -> LM:
+    return WhisperLM(cfg) if cfg.encdec is not None else LM(cfg)

@@ -1,0 +1,5 @@
+from repro.optim.optimizer import (  # noqa: F401
+    AdamWConfig, TrainState, adamw_init, adamw_update, global_norm,
+    make_train_step,
+)
+from repro.optim.schedules import cosine, linear_warmup, wsd  # noqa: F401

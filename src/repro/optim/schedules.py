@@ -1,0 +1,28 @@
+"""LR schedules: cosine, linear, and WSD (warmup-stable-decay, MiniCPM)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup: int, peak: float):
+    return peak * jnp.minimum(1.0, (step + 1) / max(1, warmup))
+
+
+def cosine(step, *, peak: float, warmup: int, total: int,
+           final_frac: float = 0.1):
+    warm = linear_warmup(step, warmup, peak)
+    t = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup, warm, peak * cos)
+
+
+def wsd(step, *, peak: float, warmup: int, total: int,
+        decay_frac: float = 0.1, final_frac: float = 0.01):
+    """Warmup-Stable-Decay (MiniCPM): flat peak LR, sharp exponential-ish
+    decay over the last `decay_frac` of training."""
+    warm = linear_warmup(step, warmup, peak)
+    decay_start = total * (1 - decay_frac)
+    t = jnp.clip((step - decay_start) / max(1.0, total - decay_start), 0.0, 1.0)
+    stable = peak * jnp.power(final_frac, t)   # exp decay to final_frac*peak
+    return jnp.where(step < warmup, warm, stable)

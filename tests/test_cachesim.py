@@ -1,0 +1,79 @@
+"""Property tests (hypothesis) for the cache simulator + traffic model."""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.cachesim import (SetAssocCache, misses_at_capacity,
+                                 stack_distance_profile)
+from repro.core.traffic import INF, AccessStream, TrafficStats
+
+traces = st.lists(st.integers(0, 40), min_size=1, max_size=300)
+
+
+@given(traces)
+@settings(max_examples=50, deadline=None)
+def test_stack_distance_matches_fully_assoc_lru(trace):
+    """Mattson inclusion: profile misses == exact fully-assoc LRU misses."""
+    dist = stack_distance_profile(trace)
+    for cap in (1, 2, 4, 8, 64):
+        sim = SetAssocCache(cap, assoc=cap)  # fully associative
+        for b in trace:
+            sim.access(b)
+        assert sim.stats.misses == misses_at_capacity(dist, cap)
+
+
+@given(traces)
+@settings(max_examples=30, deadline=None)
+def test_miss_curve_monotone_in_capacity(trace):
+    dist = stack_distance_profile(trace)
+    misses = [misses_at_capacity(dist, c) for c in (1, 2, 4, 8, 16, 64)]
+    assert all(a >= b for a, b in zip(misses, misses[1:]))
+    assert misses[0] <= len(trace)
+    # cold misses are a floor
+    assert misses[-1] >= len(set(trace))
+
+
+@given(traces, st.integers(1, 4))
+@settings(max_examples=30, deadline=None)
+def test_set_assoc_writebacks_bounded(trace, assoc):
+    sim = SetAssocCache(8, assoc=assoc)
+    n_writes = 0
+    for i, b in enumerate(trace):
+        is_write = (i % 3 == 0)
+        n_writes += is_write
+        sim.access(b, is_write)
+    assert sim.stats.writebacks <= n_writes
+    assert sim.stats.misses <= sim.stats.accesses
+
+
+streams = st.lists(
+    st.tuples(st.floats(1.0, 1e9), st.booleans(),
+              st.one_of(st.just(INF), st.floats(1.0, 1e8))),
+    min_size=1, max_size=20)
+
+
+@given(streams)
+@settings(max_examples=50, deadline=None)
+def test_dram_traffic_monotone_in_capacity(spec):
+    stats = TrafficStats(
+        "prop", 1, False,
+        tuple(AccessStream(f"s{i}", b, w, rd)
+              for i, (b, w, rd) in enumerate(spec)), 1e9)
+    caps = [2**20 * c for c in (1, 2, 4, 8, 32, 128)]
+    tx = [stats.dram_tx(c) for c in caps]
+    assert all(a >= b - 1e-6 for a, b in zip(tx, tx[1:]))
+    assert tx[-1] >= 0.0
+    # DRAM traffic never exceeds total L2 traffic
+    assert tx[0] <= stats.l2_read_tx + stats.l2_write_tx + 1e-6
+
+
+@given(streams)
+@settings(max_examples=50, deadline=None)
+def test_streaming_accesses_always_miss(spec):
+    stats = TrafficStats(
+        "prop", 1, False,
+        tuple(AccessStream(f"s{i}", b, w, INF)
+              for i, (b, w, _) in enumerate(spec)), 1e9)
+    total = stats.l2_read_tx + stats.l2_write_tx
+    assert stats.dram_tx(1 << 40) == abs(total) or \
+        abs(stats.dram_tx(1 << 40) - total) < 1e-6

@@ -1,0 +1,156 @@
+"""Validation of the DeepNVM++ reproduction against the paper's numbers."""
+
+import math
+
+import pytest
+
+from repro.core import bitcell, isoarea, isocap, scaling, tuner
+from repro.core.calibration import PAPER_CLAIMS, TABLE1, TABLE2
+
+
+class TestTable1:
+    def test_fin_counts_derived_by_sweep(self):
+        stt = bitcell.characterize("stt")
+        sot = bitcell.characterize("sot")
+        assert (stt.fins_read, stt.fins_write) == (4, 4)
+        assert (sot.fins_read, sot.fins_write) == (1, 3)
+
+    @pytest.mark.parametrize("mem", ["stt", "sot"])
+    def test_device_parameters(self, mem):
+        c = bitcell.characterize(mem)
+        ref = TABLE1[mem]
+        assert c.sense_latency_s == pytest.approx(ref["sense_lat"], rel=0.02)
+        assert c.sense_energy_j == pytest.approx(ref["sense_e"], rel=0.02)
+        assert c.write_latency_set_s == pytest.approx(ref["wlat_set"], rel=0.02)
+        assert c.write_latency_reset_s == pytest.approx(ref["wlat_reset"],
+                                                        rel=0.02)
+        assert c.write_energy_set_j == pytest.approx(ref["we_set"], rel=0.05)
+        assert c.write_energy_reset_j == pytest.approx(ref["we_reset"], rel=0.05)
+        assert c.area_norm == pytest.approx(ref["area"], rel=0.01)
+
+    def test_sram_is_area_baseline(self):
+        assert bitcell.characterize("sram").area_norm == 1.0
+
+
+class TestTable2:
+    @pytest.mark.parametrize("mem", ["sram", "stt", "sot"])
+    def test_3mb_anchor_exact(self, mem):
+        d = tuner.tuned_design(mem, 3)
+        ref = TABLE2[mem]
+        assert d.read_latency_s * 1e9 == pytest.approx(ref["rlat"], rel=0.01)
+        assert d.write_latency_s * 1e9 == pytest.approx(ref["wlat"], rel=0.01)
+        assert d.read_energy_j * 1e9 == pytest.approx(ref["re"], rel=0.01)
+        assert d.write_energy_j * 1e9 == pytest.approx(ref["we"], rel=0.01)
+        assert d.leakage_w * 1e3 == pytest.approx(ref["leak"], rel=0.01)
+        assert d.area_mm2 == pytest.approx(ref["area"], rel=0.01)
+
+    def test_iso_area_capacities(self):
+        assert tuner.iso_area_capacity("stt") == 7
+        assert tuner.iso_area_capacity("sot") == 10
+
+    def test_iso_area_ppa_within_model_tolerance(self):
+        # latency/energy at the iso-area points are model extrapolation;
+        # leak/area are anchored (see EXPERIMENTS.md SSValidation)
+        for col in ("stt_isoarea", "sot_isoarea"):
+            d = tuner.tuned_design(col.split("_")[0], TABLE2[col]["cap"])
+            assert d.leakage_w * 1e3 == pytest.approx(TABLE2[col]["leak"],
+                                                      rel=0.01)
+            assert d.area_mm2 == pytest.approx(TABLE2[col]["area"], rel=0.01)
+            assert d.read_latency_s * 1e9 == pytest.approx(
+                TABLE2[col]["rlat"], rel=0.40)
+
+    def test_edap_tuning_beats_median_of_space(self):
+        """Algorithm 1 must pick a design no worse than the space median."""
+        from repro.core.cachemodel import CacheModel
+        model = CacheModel("stt")
+        cap = 3 * 2**20
+        edaps = sorted(model.evaluate(cap, org).edap()
+                       for org in model.design_space(cap))
+        tuned = tuner.tune(model, cap)
+        assert tuned.edap() <= edaps[len(edaps) // 2]
+        assert tuned.edap() == pytest.approx(edaps[0])
+
+
+class TestHeadlineClaims:
+    @pytest.fixture(scope="class")
+    def isocap_summary(self):
+        return isocap.summary(isocap.analyze())
+
+    def test_dyn_energy(self, isocap_summary):
+        for mem in ("stt", "sot"):
+            paper = PAPER_CLAIMS["isocap_dyn_energy_x"][mem]
+            assert isocap_summary[mem]["dyn_energy_x"] == pytest.approx(
+                paper, rel=0.15)
+
+    def test_leak_reduction(self, isocap_summary):
+        for mem in ("stt", "sot"):
+            paper = PAPER_CLAIMS["isocap_leak_reduction"][mem]
+            assert isocap_summary[mem]["leak_reduction"] == pytest.approx(
+                paper, rel=0.15)
+
+    def test_energy_reduction_direction_and_band(self, isocap_summary):
+        # model reconstruction runs ~20% below the paper's means (see
+        # EXPERIMENTS.md); the ordering SOT > STT >> 1 must hold
+        stt = isocap_summary["stt"]["energy_reduction"]
+        sot = isocap_summary["sot"]["energy_reduction"]
+        assert sot > stt > 3.0
+        assert sot == pytest.approx(
+            PAPER_CLAIMS["isocap_energy_reduction"]["sot"], rel=0.25)
+
+    def test_read_share(self, isocap_summary):
+        assert isocap_summary["sram"]["read_share_of_dyn"] == pytest.approx(
+            PAPER_CLAIMS["sram_read_share_of_dyn"], abs=0.1)
+
+    def test_fig6_dram_anchors(self):
+        curve = isoarea.dram_reduction_curve()
+        assert curve[7] == pytest.approx(14.6, abs=2.0)
+        assert curve[10] == pytest.approx(19.8, abs=2.0)
+        # monotone saturating curve like the paper's
+        caps = sorted(curve)
+        assert all(curve[a] <= curve[b] + 1e-9
+                   for a, b in zip(caps, caps[1:]))
+
+    def test_isoarea_energy_reduction(self):
+        s = isoarea.summary(isoarea.analyze())
+        assert s["stt"]["energy_reduction"] == pytest.approx(
+            PAPER_CLAIMS["isoarea_energy_reduction"]["stt"], rel=0.15)
+        assert s["sot"]["edp_reduction_with_dram"] == pytest.approx(
+            PAPER_CLAIMS["isoarea_edp_reduction_with_dram"]["sot"], rel=0.15)
+
+    def test_scaling_orders_of_magnitude(self):
+        head = scaling.headline(scaling.workload_sweep(
+            capacities_mb=(1, 4, 16, 32)))
+        # the paper's qualitative claim: EDP reduction reaches orders of
+        # magnitude at large capacities for both flavors
+        assert head["stt"]["edp_reduction_max"] > 10
+        assert head["sot"]["edp_reduction_max"] > 30
+
+    def test_scaling_sram_wins_small_caps(self):
+        rows = scaling.workload_sweep(capacities_mb=(1,))
+        # at 1 MB, SRAM EDP is competitive (ratio ~1 or better for STT)
+        stt = [r for r in rows if r.mem == "stt"]
+        assert all(r.edp_x > 0.7 for r in stt)
+
+
+class TestCrossoverStructure:
+    """Fig. 9 qualitative structure."""
+
+    def test_read_latency_crossover(self):
+        r1 = {m: tuner.tuned_design(m, 1).read_latency_s
+              for m in ("sram", "stt")}
+        r16 = {m: tuner.tuned_design(m, 16).read_latency_s
+               for m in ("sram", "stt")}
+        assert r1["sram"] < r1["stt"]     # SRAM faster at small caps
+        assert r16["sram"] > r16["stt"]   # MRAM faster at large caps
+
+    def test_leakage_gap_grows(self):
+        gap = [tuner.tuned_design("sram", c).leakage_w
+               / tuner.tuned_design("sot", c).leakage_w for c in (2, 8, 32)]
+        assert gap[0] < gap[1] < gap[2]
+
+    def test_area_reduction_matches_paper_average(self):
+        s = tuner.tuned_design("sram", 3).area_mm2
+        assert 1 - tuner.tuned_design("stt", 3).area_mm2 / s == \
+            pytest.approx(0.58, abs=0.03)
+        assert 1 - tuner.tuned_design("sot", 3).area_mm2 / s == \
+            pytest.approx(0.65, abs=0.03)

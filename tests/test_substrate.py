@@ -1,0 +1,152 @@
+"""Substrate tests: checkpointing, data, compression, schedules, faults."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, SyntheticTokens
+from repro.distributed.compression import (EFCompressor, dequantize_int8,
+                                           quantize_int8, topk_sparsify)
+from repro.distributed.fault import RestartPolicy, StragglerDetector
+from repro.optim.schedules import cosine, wsd
+
+
+class TestCheckpoint:
+    def tree(self, v=0.0):
+        return {"a": jnp.full((4, 3), v), "b": {"c": jnp.arange(5.0) + v}}
+
+    def test_roundtrip_and_keep_k(self, tmp_path):
+        m = CheckpointManager(str(tmp_path), keep=2)
+        for s in (10, 20, 30):
+            m.save(s, self.tree(s), blocking=True)
+        assert m.latest_step() == 30
+        assert sorted(m._complete_steps()) == [20, 30]  # gc'd step 10
+        step, t = m.restore_latest(self.tree())
+        assert step == 30
+        np.testing.assert_array_equal(t["a"], np.full((4, 3), 30.0))
+
+    def test_async_save(self, tmp_path):
+        m = CheckpointManager(str(tmp_path))
+        m.save(5, self.tree(5), blocking=False)
+        m.wait()
+        assert m.latest_step() == 5
+
+    def test_corrupt_checkpoint_skipped(self, tmp_path):
+        m = CheckpointManager(str(tmp_path), keep=5)
+        m.save(1, self.tree(1), blocking=True)
+        m.save(2, self.tree(2), blocking=True)
+        # corrupt the newest: delete a leaf
+        os.remove(os.path.join(str(tmp_path), "step_0000000002",
+                               "leaf_00000.npy"))
+        step, t = m.restore_latest(self.tree())
+        assert step == 1
+
+    def test_partial_save_never_visible(self, tmp_path):
+        m = CheckpointManager(str(tmp_path))
+        os.makedirs(os.path.join(str(tmp_path), "step_0000000009.tmp"))
+        assert m.latest_step() is None
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        m = CheckpointManager(str(tmp_path))
+        m.save(1, self.tree(), blocking=True)
+        bad = {"a": jnp.zeros((2, 2)), "b": {"c": jnp.zeros(5)}}
+        with pytest.raises(ValueError):
+            m.restore(1, bad)
+
+
+class TestData:
+    def test_deterministic_addressing(self):
+        cfg = DataConfig(vocab=97, seq_len=16, global_batch=4)
+        d1, d2 = SyntheticTokens(cfg), SyntheticTokens(cfg)
+        b1, b2 = d1.batch(7), d2.batch(7)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        assert not np.array_equal(d1.batch(8)["tokens"], b1["tokens"])
+
+    def test_host_sharding_partitions_global_batch(self):
+        cfg = DataConfig(vocab=97, seq_len=8, global_batch=8, n_hosts=1)
+        full = SyntheticTokens(cfg).batch(3)
+        # two hosts half the batch each; content depends on host_index
+        h0 = SyntheticTokens(DataConfig(vocab=97, seq_len=8, global_batch=8,
+                                        n_hosts=2, host_index=0)).batch(3)
+        h1 = SyntheticTokens(DataConfig(vocab=97, seq_len=8, global_batch=8,
+                                        n_hosts=2, host_index=1)).batch(3)
+        assert h0["tokens"].shape[0] == h1["tokens"].shape[0] == 4
+        assert not np.array_equal(h0["tokens"], h1["tokens"])
+        assert full["tokens"].shape[0] == 8
+
+    def test_labels_are_next_tokens(self):
+        cfg = DataConfig(vocab=31, seq_len=12, global_batch=2)
+        b = SyntheticTokens(cfg).batch(0)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+    def test_prefetch_matches_direct(self):
+        cfg = DataConfig(vocab=31, seq_len=8, global_batch=2)
+        data = SyntheticTokens(cfg)
+        it = data.prefetch(start_step=2)
+        step, batch = next(it)
+        assert step == 2
+        np.testing.assert_array_equal(batch["tokens"],
+                                      data.batch(2)["tokens"])
+
+
+class TestCompression:
+    @given(st.integers(0, 1000))
+    @settings(max_examples=20, deadline=None)
+    def test_int8_roundtrip_bounded_error(self, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (64,))
+        q, s = quantize_int8(x)
+        err = jnp.abs(dequantize_int8(q, s) - x)
+        assert float(jnp.max(err)) <= float(s) * 0.5 + 1e-6
+
+    def test_topk_keeps_largest(self):
+        x = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05])
+        y = topk_sparsify(x, 0.4)
+        np.testing.assert_array_equal(np.asarray(y),
+                                      [0.0, -5.0, 0.0, 3.0, 0.0])
+
+    def test_error_feedback_preserves_sum(self):
+        """EF invariant: compressed + error == original (exactly)."""
+        comp = EFCompressor(kind="int8")
+        g = {"w": jax.random.normal(jax.random.PRNGKey(0), (32,))}
+        e = comp.init(g)
+        out, e2 = comp(g, e)
+        np.testing.assert_allclose(np.asarray(out["w"] + e2["w"]),
+                                   np.asarray(g["w"]), rtol=1e-6, atol=1e-6)
+
+
+class TestFault:
+    def test_straggler_detection(self):
+        d = StragglerDetector(warmup=5)
+        flags = [d.observe(1.0 + 0.01 * (i % 3)) for i in range(20)]
+        assert not any(flags)
+        assert d.observe(10.0)  # clear outlier
+
+    def test_restart_policy_bounded(self):
+        p = RestartPolicy(max_restarts=2, window_s=100)
+        assert p.should_restart(now=0)
+        p.record(now=0)
+        assert p.should_restart(now=1)
+        p.record(now=1)
+        assert not p.should_restart(now=2)
+        assert p.should_restart(now=200)  # window expired
+
+
+class TestSchedules:
+    def test_wsd_shape(self):
+        lr = [float(wsd(s, peak=1.0, warmup=10, total=100)) for s in
+              (0, 9, 50, 89, 95, 100)]
+        assert lr[0] < lr[1] <= 1.0
+        assert lr[2] == pytest.approx(1.0)       # stable plateau
+        assert lr[3] == pytest.approx(1.0, abs=0.05)
+        assert lr[4] < 0.5                        # sharp decay phase
+        assert lr[5] == pytest.approx(0.01, rel=0.3)
+
+    def test_cosine_monotone_after_peak(self):
+        vals = [float(cosine(s, peak=1.0, warmup=10, total=100))
+                for s in range(10, 100, 10)]
+        assert all(a >= b for a, b in zip(vals, vals[1:]))

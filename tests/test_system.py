@@ -1,0 +1,96 @@
+"""End-to-end behaviour tests: training loop, fault recovery, serving."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, SyntheticTokens
+from repro.distributed import fault
+from repro.launch.specs import schedule_for
+from repro.models import lm as lm_mod
+from repro.optim import AdamWConfig, adamw_init, make_train_step
+
+
+def _setup(tmp_path, seq=32, batch=4):
+    cfg = configs.get("tinyllama-1.1b", reduced=True)
+    model = lm_mod.build(cfg)
+    opt = AdamWConfig(schedule=schedule_for(cfg))
+    step = jax.jit(make_train_step(model.loss, opt))
+    state = adamw_init(model.init(jax.random.PRNGKey(0)))
+    data = SyntheticTokens(DataConfig(vocab=cfg.vocab, seq_len=seq,
+                                      global_batch=batch))
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    return state, data, step, mgr
+
+
+def _stepper(step):
+    def fn(st, batch):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        return step(st, batch)
+    return fn
+
+
+def test_loss_decreases(tmp_path):
+    state, data, step, mgr = _setup(tmp_path)
+    state, log = fault.run_resilient(state, data, _stepper(step), mgr,
+                                     n_steps=30, checkpoint_every=100)
+    assert log[-1]["loss"] < log[0]["loss"]
+    assert all(np.isfinite(m["loss"]) for m in log)
+
+
+def test_fault_recovery_matches_uninterrupted_run(tmp_path):
+    """Crash at step 12, restore from step 10, finish — final metrics must
+    equal the run without any fault (pure-function data addressing +
+    deterministic step)."""
+    n = 18
+    s1, data, step, mgr1 = _setup(tmp_path / "a")
+    s1, log1 = fault.run_resilient(s1, data, _stepper(step), mgr1,
+                                   n_steps=n, checkpoint_every=5)
+    s2, data2, step2, mgr2 = _setup(tmp_path / "b")
+    s2, log2 = fault.run_resilient(s2, data2, _stepper(step2), mgr2,
+                                   n_steps=n, checkpoint_every=5,
+                                   fault_at=12)
+    assert int(s1.step) == int(s2.step) == n
+    assert log1[-1]["loss"] == np.float32(log2[-1]["loss"]) or \
+        abs(log1[-1]["loss"] - log2[-1]["loss"]) < 1e-5
+
+
+def test_resume_across_process_restart(tmp_path):
+    state, data, step, mgr = _setup(tmp_path)
+    state, _ = fault.run_resilient(state, data, _stepper(step), mgr,
+                                   n_steps=10, checkpoint_every=5)
+    mgr.save(int(state.step), state, blocking=True)
+    # "new process": fresh state object, restore latest
+    fresh, _, step2, mgr2 = _setup(tmp_path)
+    got_step, restored = CheckpointManager(str(tmp_path)).restore_latest(fresh)
+    assert got_step == 10
+    restored, log = fault.run_resilient(restored, data, _stepper(step2),
+                                        mgr2, n_steps=15,
+                                        checkpoint_every=100)
+    assert int(restored.step) == 15
+
+
+def test_generation_pipeline():
+    from repro.launch import serve
+    cfg = configs.get("tinyllama-1.1b", reduced=True)
+    model = lm_mod.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    toks = serve.generate(model, params, prompts, max_seq=24, gen=8)
+    assert toks.shape == (2, 8)
+    assert np.all((np.asarray(toks) >= 0) & (np.asarray(toks) < cfg.vocab))
+
+
+def test_elastic_reshard_preserves_values():
+    from repro.distributed.elastic import reshard_state
+    from repro.launch.mesh import make_host_mesh
+    cfg = configs.get("tinyllama-1.1b", reduced=True)
+    model = lm_mod.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mesh = make_host_mesh()
+    moved = reshard_state(params, mesh)
+    a = jax.tree.leaves(params)[1]
+    b = jax.tree.leaves(moved)[1]
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
