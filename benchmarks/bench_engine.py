@@ -1,0 +1,155 @@
+"""Batched-engine benchmark: the full Fig. 9/10 sweep, loop vs batched.
+
+Times the complete ``scaling.ppa_sweep`` + ``scaling.workload_sweep`` pass
+two ways:
+
+  loop     the seed implementation — one scalar ``CacheModel.evaluate`` per
+           design point (tuner.tune_loop), tuned designs and workload
+           traffic re-derived per capacity, exactly as the pre-engine code
+           did;
+  batched  the engine path — one jitted evaluation of the whole
+           (tech x capacity x organization) tensor shared by both sweeps.
+
+Cross-checks that the two paths produce the same rows, then writes the
+timing comparison to benchmarks/BENCH_engine.json (run from the repo
+root, like the rest of benchmarks/).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import time
+
+from repro.core import engine, scaling, traffic, tuner
+from repro.core.cachemodel import CacheModel
+from repro.core.isocap import INFER_BATCH, TRAIN_BATCH, MEMS
+from repro.core.scaling import CAPACITIES_MB, PPARow, ScalingRow
+from repro.core.workloads import paper_workloads
+
+JSON_PATH = "benchmarks/BENCH_engine.json"  # version-controlled record
+REPS = 5
+
+
+def _loop_ppa_sweep(capacities_mb=CAPACITIES_MB) -> list[PPARow]:
+    """scaling.ppa_sweep as the seed wrote it: a fresh scalar tune per
+    (capacity, technology)."""
+    rows = []
+    for cap in capacities_mb:
+        for mem in MEMS:
+            d = tuner.tune_loop(CacheModel(mem), int(cap * 2**20))
+            rows.append(PPARow(
+                capacity_mb=cap, mem=mem,
+                read_latency_ns=d.read_latency_s * 1e9,
+                write_latency_ns=d.write_latency_s * 1e9,
+                read_energy_nj=d.read_energy_j * 1e9,
+                write_energy_nj=d.write_energy_j * 1e9,
+                leakage_w=d.leakage_w,
+                area_mm2=d.area_mm2,
+            ))
+    return rows
+
+
+def _loop_workload_sweep(capacities_mb=CAPACITIES_MB) -> list[ScalingRow]:
+    """scaling.workload_sweep as the seed wrote it: tuned designs re-derived
+    per capacity and traffic statistics rebuilt per (capacity, stage)."""
+    workloads = paper_workloads()
+    rows = []
+    for cap in capacities_mb:
+        designs = {m: tuner.tune_loop(CacheModel(m), int(cap * 2**20))
+                   for m in MEMS}
+        for training, batch in ((False, INFER_BATCH), (True, TRAIN_BATCH)):
+            stats = {name: traffic.build(w, batch, training)
+                     for name, w in workloads.items()}
+            for mem in ("stt", "sot"):
+                ex, lx, ed = [], [], []
+                for name in workloads:
+                    r_mem = traffic.energy(stats[name], designs[mem])
+                    r_sram = traffic.energy(stats[name], designs["sram"])
+                    ex.append(r_mem.total_j(False) / r_sram.total_j(False))
+                    lx.append(r_mem.runtime_s / r_sram.runtime_s)
+                    ed.append(r_mem.edp(True) / r_sram.edp(True))
+                rows.append(ScalingRow(
+                    capacity_mb=cap, mem=mem, training=training,
+                    energy_x=statistics.mean(ex),
+                    latency_x=statistics.mean(lx),
+                    edp_x=statistics.mean(ed),
+                    energy_std=statistics.pstdev(ex),
+                    edp_std=statistics.pstdev(ed),
+                ))
+    return rows
+
+
+def _clear_engine_caches() -> None:
+    engine.design_table.cache_clear()
+    tuner._tuned_design_cached.cache_clear()
+
+
+def _check_parity(loop_rows, batched_rows, rel=1e-9) -> float:
+    assert len(loop_rows) == len(batched_rows)
+    worst = 0.0
+    for a, b in zip(loop_rows, batched_rows):
+        assert (a.capacity_mb, a.mem) == (b.capacity_mb, b.mem)
+        for f, x in a.__dict__.items():
+            y = getattr(b, f)
+            if isinstance(x, float) and x:
+                err = abs(x - y) / abs(x)
+                assert err < rel, (f, a, b)
+                worst = max(worst, err)
+    return worst
+
+
+def run() -> dict:
+    # -- loop (seed) path --------------------------------------------------
+    loop_times = []
+    for _ in range(2):
+        t0 = time.perf_counter()
+        loop_ppa = _loop_ppa_sweep()
+        loop_wl = _loop_workload_sweep()
+        loop_times.append(time.perf_counter() - t0)
+    loop_s = min(loop_times)
+
+    # -- batched path: cold (includes jit compile), then steady-state ------
+    _clear_engine_caches()
+    t0 = time.perf_counter()
+    batched_ppa = scaling.ppa_sweep()
+    batched_wl = scaling.workload_sweep()
+    cold_s = time.perf_counter() - t0
+
+    batched_times = []
+    for _ in range(REPS):
+        _clear_engine_caches()   # keep the jit executable, redo the sweep
+        t0 = time.perf_counter()
+        batched_ppa = scaling.ppa_sweep()
+        batched_wl = scaling.workload_sweep()
+        batched_times.append(time.perf_counter() - t0)
+    batched_s = min(batched_times)
+
+    worst = max(_check_parity(loop_ppa, batched_ppa),
+                _check_parity(loop_wl, batched_wl))
+
+    result = dict(
+        sweep="scaling.ppa_sweep + scaling.workload_sweep",
+        capacities_mb=list(CAPACITIES_MB),
+        n_design_points=len(engine.ORGS) * len(CAPACITIES_MB) * len(MEMS),
+        loop_s=loop_s,
+        batched_cold_s=cold_s,
+        batched_s=batched_s,
+        speedup_x=loop_s / batched_s,
+        speedup_cold_x=loop_s / cold_s,
+        parity_max_rel_err=worst,
+    )
+    os.makedirs(os.path.dirname(JSON_PATH), exist_ok=True)
+    with open(JSON_PATH, "w") as f:
+        json.dump(result, f, indent=2)
+    return {"rows": [result],
+            "derived": (f"loop={loop_s*1e3:.0f}ms,"
+                        f"batched={batched_s*1e3:.0f}ms,"
+                        f"speedup={result['speedup_x']:.1f}x,"
+                        f"parity_err={worst:.2e}")}
+
+
+if __name__ == "__main__":
+    out = run()
+    print(out["derived"])

@@ -21,6 +21,7 @@ MODULES = (
     "fig7_8_isoarea",
     "fig9_10_scaling",
     "lm_nvm",
+    "bench_engine",
 )
 
 

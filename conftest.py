@@ -1,0 +1,10 @@
+"""Repo-root pytest bootstrap: make `python -m pytest` work without an
+explicit PYTHONPATH=src (the tier-1 command still sets it; CI and bare
+local runs get it for free)."""
+
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(__file__), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

@@ -3,13 +3,19 @@ sweep technology x capacity x workload and emit the EDP landscape.
 
     PYTHONPATH=src python examples/nvm_dse.py
 """
-from repro.core import scaling, traffic, tuner
+from repro.core import engine, traffic
 from repro.core.report import markdown_table
 from repro.core.workloads import paper_workloads
 
+CAPS_MB = (2, 3, 6, 12, 24)
+MEMS = ("sram", "stt", "sot")
+
+# the whole (tech x capacity x organization) space, one batched evaluation
+table = engine.design_table(MEMS, tuple(c * 2**20 for c in CAPS_MB))
+
 rows = []
-for cap in (2, 3, 6, 12, 24):
-    designs = {m: tuner.tuned_design(m, cap) for m in ("sram", "stt", "sot")}
+for cap in CAPS_MB:
+    designs = {m: table.tuned(m, cap * 2**20) for m in MEMS}
     for wname, w in paper_workloads().items():
         stats = traffic.build(w, batch=4, training=False)
         base = traffic.energy(stats, designs["sram"])

@@ -14,11 +14,13 @@ def config() -> ArchConfig:
 
 
 def reduced_config() -> ArchConfig:
+    # 2 layers (1 dense + 1 MoE) and 4 experts: keeps the fine-grained
+    # routed+shared expert path at the minimum eager op count
     return ArchConfig(
         name="deepseek-moe-16b-smoke", family="moe",
-        n_layers=3, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
         d_ff=96, vocab=256,
-        moe=MoESpec(n_experts=8, top_k=2, d_expert=96, n_shared=1,
+        moe=MoESpec(n_experts=4, top_k=2, d_expert=96, n_shared=1,
                     first_dense_layers=1, dense_d_ff=192, group_size=32,
                     capacity_factor=8.0),
     )

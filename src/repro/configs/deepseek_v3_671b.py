@@ -16,13 +16,16 @@ def config() -> ArchConfig:
 
 
 def reduced_config() -> ArchConfig:
+    # 2 layers (1 dense + 1 MoE) and 4 experts: the smallest shape that
+    # still exercises the MLA, routed+shared expert, and MTP paths — eager
+    # smoke-test cost scales with op count, not parameter size
     return ArchConfig(
         name="deepseek-v3-671b-smoke", family="moe",
-        n_layers=4, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
         d_ff=64, vocab=256, mtp=True,
         mla=MLASpec(q_lora_rank=32, kv_lora_rank=16,
                     qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16),
-        moe=MoESpec(n_experts=8, top_k=2, d_expert=64, n_shared=1,
+        moe=MoESpec(n_experts=4, top_k=2, d_expert=64, n_shared=1,
                     first_dense_layers=1, dense_d_ff=128, group_size=32,
                     capacity_factor=8.0),
     )

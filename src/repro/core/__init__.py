@@ -13,6 +13,7 @@ from repro.core import (  # noqa: F401
     cachemodel,
     cachesim,
     calibration,
+    engine,
     isoarea,
     isocap,
     mtj,

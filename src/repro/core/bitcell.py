@@ -27,10 +27,24 @@ from __future__ import annotations
 import dataclasses
 import math
 
+import numpy as np
+
 from repro.core import mtj
 from repro.core.tech import TechNode, TECH_16NM
 
 MAX_FINS = 4  # 2-poly-pitch bitcell fin budget ([45] layout formulation)
+
+# Bitcell parameters consumed by the cache PPA equations, in the order the
+# batched engine (core/engine.py) packs them into per-technology vectors.
+ARRAY_FIELDS = (
+    "read_current_a",
+    "sense_latency_s",
+    "sense_energy_j",
+    "write_latency_avg_s",
+    "write_energy_avg_j",
+    "area_norm",
+    "cell_leakage_w",
+)
 
 # Bitcell footprint vs fin count, normalized to the foundry 6T SRAM cell.
 # Linear-in-fins with a per-structure base term ([45]); SOT's shared-bitline
@@ -75,6 +89,12 @@ class Bitcell:
     @property
     def shares_access_device(self) -> bool:
         return self.name == "stt"
+
+    def as_array(self) -> np.ndarray:
+        """Parameter vector (float64, ARRAY_FIELDS order) for the batched
+        engine: one row of the per-technology parameter matrix."""
+        return np.array([getattr(self, f) for f in ARRAY_FIELDS],
+                        dtype=np.float64)
 
 
 def _read_current(tech_name: str, dev: mtj.MTJDevice, fins: int) -> float:

@@ -53,10 +53,12 @@ FLIP_P = 0.18             # measured DL-tensor bit-flip probability per write
 
 ACCESS_TYPES = ("normal", "fast", "sequential")
 
-# Subarray aspect design space (NVSim's internal sweep).
-_ROW_CHOICES = (128, 256, 512, 1024)
-_COL_CHOICES = (256, 512, 1024, 2048)
-_BANK_CHOICES = (1, 2, 4, 8, 16, 32)
+# Subarray aspect design space (NVSim's internal sweep).  Public: the
+# batched engine (core/engine.py) builds its structure-of-arrays org grid
+# from the same choices, in the same itertools.product order.
+ROW_CHOICES = (128, 256, 512, 1024)
+COL_CHOICES = (256, 512, 1024, 2048)
+BANK_CHOICES = (1, 2, 4, 8, 16, 32)
 
 # Periphery timing/energy building blocks at 16 nm (pre-calibration scale).
 _T_GATE = 18e-12          # FO4-ish gate delay
@@ -265,6 +267,37 @@ class CacheModel:
     # -- full evaluation ---------------------------------------------------------
 
     def evaluate(self, capacity_bytes: int, org: CacheOrg) -> CacheDesign:
+        """One design point — a single-element batch on the engine.
+
+        The per-quantity scalar methods above remain the pure-Python
+        reference implementation (exercised by the engine parity tests and
+        by ``evaluate_scalar``); this entry point shares the batched code
+        path with the full sweep.
+        """
+        return self.evaluate_batch(capacity_bytes, (org,))[0]
+
+    def evaluate_batch(self, capacity_bytes: int,
+                       orgs) -> list[CacheDesign]:
+        """Evaluate many organizations in one batched engine call."""
+        from repro.core import engine  # deferred: engine imports this module
+        orgs = tuple(orgs)
+        out = engine.evaluate((capacity_bytes,), orgs, mems=(self.mem,),
+                              cells=(self.cell,), cals=(self.cal,),
+                              node=self.node)
+        return [CacheDesign(
+            mem=self.mem,
+            capacity_bytes=capacity_bytes,
+            org=org,
+            read_latency_s=float(out["read_latency_s"][0, 0, i]),
+            write_latency_s=float(out["write_latency_s"][0, 0, i]),
+            read_energy_j=float(out["read_energy_j"][0, 0, i]),
+            write_energy_j=float(out["write_energy_j"][0, 0, i]),
+            leakage_w=float(out["leakage_w"][0, 0]),
+            area_mm2=float(out["area_mm2"][0, 0]),
+        ) for i, org in enumerate(orgs)]
+
+    def evaluate_scalar(self, capacity_bytes: int, org: CacheOrg) -> CacheDesign:
+        """The original pure-Python evaluation (parity/benchmark reference)."""
         return CacheDesign(
             mem=self.mem,
             capacity_bytes=capacity_bytes,
@@ -280,7 +313,7 @@ class CacheModel:
     def design_space(self, capacity_bytes: int):
         """All internal organizations NVSim would sweep for this capacity."""
         for banks, rows, cols, access in itertools.product(
-                _BANK_CHOICES, _ROW_CHOICES, _COL_CHOICES, ACCESS_TYPES):
+                BANK_CHOICES, ROW_CHOICES, COL_CHOICES, ACCESS_TYPES):
             bits = _data_bits(capacity_bytes)
             if banks * rows * cols > 4 * bits:   # degenerate: mostly empty
                 continue

@@ -1,0 +1,381 @@
+"""Batched design-space engine — the full NVSim sweep as one computation.
+
+DeepNVM++'s Algorithm 1 is an exhaustive sweep: every internal cache
+organization (banks x rows x cols), every NVSim access type, every
+optimization target, for every (technology, capacity) pair.  The scalar
+path (core/cachemodel.py) walks that space one design point at a time;
+this module evaluates it as a single batched tensor computation.
+
+Representation: structure-of-arrays.  The organization grid is four flat
+arrays (banks, rows, cols, access index) in exactly the order the scalar
+``CacheModel.design_space`` iterates (itertools.product over the same
+choices), so argmin tie-breaking matches the scalar ``min``.  Technologies
+are rows of two parameter matrices — the characterized bitcell vector
+(bitcell.ARRAY_FIELDS) and the calibration vector (CAL_FIELDS) — and
+capacities are a third axis.  One jitted function maps the cross product
+
+    [n_tech] x [n_cap] x [n_org]  ->  PPA tensors of shape [m, c, o]
+
+re-expressing every latency/energy/leakage/area equation of cachemodel.py
+as a pure array function.  Float64 throughout (jax.experimental.enable_x64)
+so the batched numbers agree with the scalar Python-float path to the last
+few ulps, keeping the Table I/II calibration anchors intact.
+
+On top of the PPA tensors, :class:`DesignTable` implements Algorithm 1 as a
+masked argmin per (optimization target, access type) — the same nominee
+pool and the same first-strict-minimum EDAP tie-breaking as the scalar
+``tuner.tune`` — plus vectorized feasibility queries (iso-area capacity
+search) that need no per-capacity tuning at all.
+
+``design_table`` memoizes fully-calibrated tables per (mems, capacities)
+so every consumer — tuner, isocap, isoarea, scaling, benchmarks — shares
+one evaluation of the sweep.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from repro.core import bitcell as bitcell_mod
+from repro.core.cachemodel import (
+    ACCESS_TYPES,
+    ASSOC,
+    BANK_CHOICES,
+    COL_CHOICES,
+    FLIP_P,
+    LINE_BYTES,
+    ROW_CHOICES,
+    TAG_BITS,
+    CacheDesign,
+    CacheOrg,
+    _C_BITLINE_PER_ROW,
+    _C_WORDLINE_PER_COL,
+    _E_GATE,
+    _HTREE_NS_PER_MM,
+    _HTREE_PJ_PER_MM_BIT,
+    _SRAM_LAT_STRESS_EXP,
+    _SRAM_LEAK_STRESS_EXP,
+    _STRESS_ANCHOR_MB,
+    _T_GATE,
+    _T_SENSE_AMP,
+)
+from repro.core.tech import TechNode, TECH_16NM
+
+MEMS = ("sram", "stt", "sot")
+
+# Calibration parameters consumed by the PPA equations, in the order they
+# are packed into the per-technology calibration matrix.
+CAL_FIELDS = (
+    "peri_area_lin",
+    "peri_area_sqrt",
+    "leak_lin",
+    "leak_sqrt",
+    "k_read_lat",
+    "k_write_lat",
+    "k_read_e",
+    "k_write_e",
+)
+
+# TechNode parameters the equations read (packed as a small vector so a
+# non-default node stays a runtime input, not a recompile).
+NODE_FIELDS = ("vdd", "ion_per_fin_a", "sense_voltage_v", "sram_cell_area_um2")
+
+# --- structure-of-arrays organization grid ---------------------------------
+# Same product order as CacheModel.design_space so masked argmins break ties
+# identically to the scalar min() over the generated sequence.
+_ORG_TUPLES = tuple(itertools.product(
+    BANK_CHOICES, ROW_CHOICES, COL_CHOICES, range(len(ACCESS_TYPES))))
+ORG_BANKS = np.array([t[0] for t in _ORG_TUPLES], dtype=np.int64)
+ORG_ROWS = np.array([t[1] for t in _ORG_TUPLES], dtype=np.int64)
+ORG_COLS = np.array([t[2] for t in _ORG_TUPLES], dtype=np.int64)
+ORG_ACCESS = np.array([t[3] for t in _ORG_TUPLES], dtype=np.int64)
+N_ORGS = len(_ORG_TUPLES)
+
+ORGS = tuple(CacheOrg(banks=int(b), rows=int(r), cols=int(c),
+                      access=ACCESS_TYPES[a])
+             for b, r, c, a in _ORG_TUPLES)
+
+_SEQ = ACCESS_TYPES.index("sequential")
+_FAST = ACCESS_TYPES.index("fast")
+
+
+def valid_mask(capacities_bytes: np.ndarray) -> np.ndarray:
+    """[c, o] bool — CacheModel.design_space's feasibility filters."""
+    caps = np.asarray(capacities_bytes, dtype=np.int64)[:, None]
+    bits = caps * 8
+    brc = (ORG_BANKS * ORG_ROWS * ORG_COLS)[None, :]
+    degenerate = brc > 4 * bits
+    # scalar path: float division, so mirror it bit-for-bit
+    too_few = bits.astype(np.float64) / brc.astype(np.float64) > 4096
+    return ~(degenerate | too_few)
+
+
+@jax.jit
+def _ppa_kernel(cell, cal, is_sram, node, caps_bytes, banks, rows, cols, acc):
+    """PPA equations of cachemodel.py as one batched map.
+
+    cell [m, 7] (bitcell.ARRAY_FIELDS), cal [m, 8] (CAL_FIELDS),
+    is_sram [m], node [4] (NODE_FIELDS), caps_bytes [c],
+    banks/rows/cols/acc [o]  ->  dict of [m, c, o] / [m, c] tensors.
+
+    Every expression keeps the scalar path's operation order so float64
+    results match the Python-float reference to the last ulps.
+    """
+    # broadcast axes: m = technology, c = capacity, o = organization
+    def M(x):      # [m] -> [m, 1, 1]
+        return x[:, None, None]
+
+    vdd, ion, sense_v, sram_cell_um2 = node
+    (i_read, sense_lat, sense_e, wlat_avg, we_avg, area_norm,
+     cell_leak) = (M(cell[:, i]) for i in range(cell.shape[1]))
+    (peri_area_lin, peri_area_sqrt, leak_lin, leak_sqrt,
+     k_read_lat, k_write_lat, k_read_e, k_write_e) = (
+        M(cal[:, i]) for i in range(cal.shape[1]))
+    sram = M(is_sram)
+
+    cap = caps_bytes[None, :, None].astype(jnp.float64)       # [1, c, 1]
+    cap_mb = cap / 2**20
+    data_bits = cap * 8
+    tag_bits = jnp.floor(cap / LINE_BYTES) * TAG_BITS
+    bits_total = data_bits + tag_bits
+
+    banks = banks[None, None, :].astype(jnp.float64)          # [1, 1, o]
+    rows = rows[None, None, :].astype(jnp.float64)
+    cols = cols[None, None, :].astype(jnp.float64)
+    acc = acc[None, None, :]
+
+    # -- geometry (CacheModel._subarrays / area_mm2 / _htree_mm) -----------
+    n_sub = jnp.maximum(1.0, jnp.ceil(bits_total / (rows * cols)))
+    cell_um2 = area_norm * sram_cell_um2
+    array_area = bits_total * cell_um2 * 1e-6 / 0.85          # mm2_from_um2
+    peri_area = peri_area_lin * cap_mb + peri_area_sqrt * jnp.sqrt(cap_mb)
+    area = array_area + peri_area                             # [m, c, 1]
+    htree_mm = jnp.sqrt(area) * (1.0 + jnp.log2(banks) / 8.0)
+
+    stress_base = cap / 2**20 / _STRESS_ANCHOR_MB
+    stress_lat = jnp.where(sram, stress_base ** _SRAM_LAT_STRESS_EXP, 1.0)
+    stress_leak = jnp.where(sram, stress_base ** _SRAM_LEAK_STRESS_EXP, 1.0)
+
+    # -- latency -----------------------------------------------------------
+    decoder = jnp.log2(rows) * _T_GATE
+    c_wl = cols * _C_WORDLINE_PER_COL
+    wordline = 2.2 * c_wl * (vdd / ion) * 0.05
+    c_bl = rows * _C_BITLINE_PER_ROW
+    bitline = c_bl * sense_v / i_read + sense_lat + _T_SENSE_AMP
+    routing = 2.0 * _T_GATE * jnp.log2(jnp.maximum(2.0, n_sub))
+    ht_lat = htree_mm * _HTREE_NS_PER_MM * 1e-9
+
+    array_t = decoder + wordline + bitline
+    tag_t = decoder + wordline + 0.4 * bitline
+    lat_seq = ht_lat + routing + tag_t + array_t + 2 * _T_GATE
+    lat_fast = ht_lat + routing + array_t + _T_GATE
+    lat_norm = ht_lat + routing + jnp.maximum(tag_t, array_t) + 3 * _T_GATE
+    read_lat = jnp.where(acc == _SEQ, lat_seq,
+                         jnp.where(acc == _FAST, lat_fast, lat_norm))
+    read_lat = read_lat * k_read_lat * stress_lat
+    write_lat = (ht_lat + routing + decoder + wordline + wlat_avg) \
+        * k_write_lat * stress_lat
+
+    # -- energy ------------------------------------------------------------
+    line_bits = LINE_BYTES * 8
+    ways_sensed = jnp.where(acc == _SEQ, 1.0, float(ASSOC))
+    sense = line_bits * ways_sensed * sense_e
+    bl_read = line_bits * ways_sensed * c_bl * vdd * vdd
+    ht_e = htree_mm * _HTREE_PJ_PER_MM_BIT * 1e-12 * line_bits
+    dec_e = jnp.log2(rows) * 64 * _E_GATE
+    route_e = n_sub * 4 * _E_GATE
+    read_e = (sense + bl_read + ht_e + dec_e + route_e) * k_read_e
+
+    flips = line_bits * jnp.where(sram, 1.0, FLIP_P)
+    cellw = flips * we_avg
+    bl_write = line_bits * c_bl * vdd * vdd * 2.0
+    write_e = (cellw + bl_write + ht_e + dec_e + route_e) * k_write_e
+
+    # -- leakage (org-independent, like CacheModel.leakage_w) --------------
+    cells_leak = bits_total * cell_leak * stress_leak
+    peri_leak = leak_lin * cap_mb + leak_sqrt * jnp.sqrt(cap_mb)
+    leakage = (cells_leak + peri_leak)[:, :, 0]               # [m, c]
+
+    return dict(
+        read_latency_s=read_lat,
+        write_latency_s=write_lat,
+        read_energy_j=read_e,
+        write_energy_j=write_e,
+        leakage_w=leakage,
+        area_mm2=area[:, :, 0],
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignTable:
+    """Evaluated (tech x capacity x organization) sweep + Algorithm 1."""
+
+    mems: tuple[str, ...]
+    capacities_bytes: tuple[int, ...]
+    read_latency_s: np.ndarray     # [m, c, o]
+    write_latency_s: np.ndarray    # [m, c, o]
+    read_energy_j: np.ndarray      # [m, c, o]
+    write_energy_j: np.ndarray     # [m, c, o]
+    leakage_w: np.ndarray          # [m, c]
+    area_mm2: np.ndarray           # [m, c]
+    valid: np.ndarray              # [c, o] bool
+
+    # -- indexing ----------------------------------------------------------
+
+    def _mc(self, mem: str, capacity_bytes: int) -> tuple[int, int]:
+        return self.mems.index(mem), self.capacities_bytes.index(capacity_bytes)
+
+    def design(self, mem: str, capacity_bytes: int, org_index: int) -> CacheDesign:
+        """Materialize one design point as the scalar-API dataclass."""
+        m, c = self._mc(mem, capacity_bytes)
+        o = org_index
+        return CacheDesign(
+            mem=mem,
+            capacity_bytes=capacity_bytes,
+            org=ORGS[o],
+            read_latency_s=float(self.read_latency_s[m, c, o]),
+            write_latency_s=float(self.write_latency_s[m, c, o]),
+            read_energy_j=float(self.read_energy_j[m, c, o]),
+            write_energy_j=float(self.write_energy_j[m, c, o]),
+            leakage_w=float(self.leakage_w[m, c]),
+            area_mm2=float(self.area_mm2[m, c]),
+        )
+
+    def designs(self, mem: str, capacity_bytes: int) -> list[CacheDesign]:
+        """All valid design points, in scalar design_space order."""
+        _, c = self._mc(mem, capacity_bytes)
+        return [self.design(mem, capacity_bytes, o)
+                for o in np.flatnonzero(self.valid[c])]
+
+    # -- Algorithm 1 -------------------------------------------------------
+
+    def edap(self, mem: str, capacity_bytes: int) -> np.ndarray:
+        """[o] EDAP vector (scalar CacheDesign.edap operation order)."""
+        m, c = self._mc(mem, capacity_bytes)
+        e = 0.5 * (self.read_energy_j[m, c] + self.write_energy_j[m, c])
+        d = 0.5 * (self.read_latency_s[m, c] + self.write_latency_s[m, c])
+        return e * d * self.area_mm2[m, c]
+
+    def tuned_index(self, mem: str, capacity_bytes: int) -> int:
+        """Algorithm 1: masked argmin per (target, access) -> min-EDAP nominee.
+
+        Matches tuner's scalar loop exactly: the OPT_TARGETS metric order,
+        the ACCESS_TYPES pool order, first-occurrence argmin within each
+        pool, and strict-< EDAP tie-breaking across nominees.
+        """
+        m, c = self._mc(mem, capacity_bytes)
+        if not self.valid[c].any():
+            raise ValueError(
+                f"empty design space at {capacity_bytes} bytes")
+        rl = self.read_latency_s[m, c]
+        wl = self.write_latency_s[m, c]
+        re_ = self.read_energy_j[m, c]
+        we_ = self.write_energy_j[m, c]
+        flat = np.full(N_ORGS, self.area_mm2[m, c])
+        leak = np.full(N_ORGS, self.leakage_w[m, c])
+        metrics = (rl, wl, re_, we_, rl * re_, wl * we_, flat, leak)
+        edap = self.edap(mem, capacity_bytes)
+        best = -1
+        for metric in metrics:
+            for a in range(len(ACCESS_TYPES)):
+                pool = self.valid[c] & (ORG_ACCESS == a)
+                if not pool.any():
+                    continue
+                nominee = int(np.argmin(np.where(pool, metric, np.inf)))
+                if best < 0 or edap[nominee] < edap[best]:
+                    best = nominee
+        return best
+
+    def tuned(self, mem: str, capacity_bytes: int) -> CacheDesign:
+        return self.design(mem, capacity_bytes,
+                           self.tuned_index(mem, capacity_bytes))
+
+    # -- vectorized feasibility (iso-area) ---------------------------------
+
+    def areas(self, mem: str) -> np.ndarray:
+        """[c] area vector — org-independent, so no tuning required."""
+        return self.area_mm2[self.mems.index(mem)]
+
+
+def _tech_matrices(mems, cells, cals, node):
+    if cells is None:
+        cells = tuple(bitcell_mod.characterize(m, node) for m in mems)
+    if cals is None:
+        from repro.core import calibration  # deferred: get() calls back here
+        cals = tuple(calibration.get(m) for m in mems)
+    cell_mat = np.stack([c.as_array() for c in cells])
+    cal_mat = np.array([[getattr(cal, f) for f in CAL_FIELDS] for cal in cals],
+                       dtype=np.float64)
+    is_sram = np.array([m == "sram" for m in mems])
+    node_vec = np.array([getattr(node, f) for f in NODE_FIELDS],
+                        dtype=np.float64)
+    return cell_mat, cal_mat, is_sram, node_vec
+
+
+def evaluate(capacities_bytes, orgs, mems=MEMS, cells=None, cals=None,
+             node: TechNode = TECH_16NM) -> dict[str, np.ndarray]:
+    """Raw batched evaluation over an arbitrary organization list.
+
+    Returns the PPA tensors keyed like CacheDesign fields: [m, c, o] for
+    the org-dependent quantities, [m, c] for leakage/area.  ``orgs`` may be
+    any sequence of CacheOrg (not just the standard grid) — this is what
+    makes the scalar ``CacheModel.evaluate`` a one-element batch.
+    """
+    mems = tuple(mems)
+    caps_arr = np.array([int(c) for c in capacities_bytes], dtype=np.int64)
+    banks = np.array([o.banks for o in orgs], dtype=np.int64)
+    rows = np.array([o.rows for o in orgs], dtype=np.int64)
+    cols = np.array([o.cols for o in orgs], dtype=np.int64)
+    acc = np.array([ACCESS_TYPES.index(o.access) for o in orgs],
+                   dtype=np.int64)
+    cell_mat, cal_mat, is_sram, node_vec = _tech_matrices(
+        mems, cells, cals, node)
+    with enable_x64():
+        out = _ppa_kernel(cell_mat, cal_mat, is_sram, node_vec, caps_arr,
+                          banks, rows, cols, acc)
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
+def sweep(capacities_bytes, mems=MEMS, cells=None, cals=None,
+          node: TechNode = TECH_16NM) -> DesignTable:
+    """Evaluate the full (mems x capacities x orgs) cross product.
+
+    ``cells``/``cals`` default to the characterized bitcell and fitted
+    calibration per technology; the calibration fixed point passes trial
+    values explicitly (which is why this function must not call
+    calibration.get itself).
+    """
+    mems = tuple(mems)
+    caps = tuple(int(c) for c in capacities_bytes)
+    cell_mat, cal_mat, is_sram, node_vec = _tech_matrices(
+        mems, cells, cals, node)
+    caps_arr = np.array(caps, dtype=np.int64)
+    with enable_x64():
+        out = _ppa_kernel(cell_mat, cal_mat, is_sram, node_vec, caps_arr,
+                          ORG_BANKS, ORG_ROWS, ORG_COLS, ORG_ACCESS)
+    return DesignTable(
+        mems=mems,
+        capacities_bytes=caps,
+        read_latency_s=np.asarray(out["read_latency_s"]),
+        write_latency_s=np.asarray(out["write_latency_s"]),
+        read_energy_j=np.asarray(out["read_energy_j"]),
+        write_energy_j=np.asarray(out["write_energy_j"]),
+        leakage_w=np.asarray(out["leakage_w"]),
+        area_mm2=np.asarray(out["area_mm2"]),
+        valid=valid_mask(caps_arr),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def design_table(mems: tuple[str, ...],
+                 capacities_bytes: tuple[int, ...]) -> DesignTable:
+    """Memoized fully-calibrated table — the shared sweep every consumer
+    (tuner, isocap, isoarea, scaling, benchmarks) reads from."""
+    return sweep(capacities_bytes, mems=mems)

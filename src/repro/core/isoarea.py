@@ -12,7 +12,7 @@ from __future__ import annotations
 import dataclasses
 from collections.abc import Sequence
 
-from repro.core import traffic, tuner
+from repro.core import engine, traffic, tuner
 from repro.core.isocap import IsoCapRow, INFER_BATCH, TRAIN_BATCH
 from repro.core.tech import Platform, GTX_1080TI
 from repro.core.workloads import Workload, paper_workloads, alexnet
@@ -31,12 +31,16 @@ class IsoAreaDesigns:
 
 
 def designs(sram_capacity_mb: float = 3.0) -> IsoAreaDesigns:
+    """Iso-area design set, read from one shared batched sweep over the
+    three (technology, capacity) corners the area budget selects."""
     stt_mb = tuner.iso_area_capacity("stt", sram_capacity_mb)
     sot_mb = tuner.iso_area_capacity("sot", sram_capacity_mb)
+    caps = (int(sram_capacity_mb * 2**20), stt_mb * 2**20, sot_mb * 2**20)
+    table = engine.design_table(("sram", "stt", "sot"), caps)
     return IsoAreaDesigns(
-        sram=tuner.tuned_design("sram", sram_capacity_mb),
-        stt=tuner.tuned_design("stt", stt_mb),
-        sot=tuner.tuned_design("sot", sot_mb),
+        sram=table.tuned("sram", caps[0]),
+        stt=table.tuned("stt", caps[1]),
+        sot=table.tuned("sot", caps[2]),
         stt_capacity_mb=stt_mb,
         sot_capacity_mb=sot_mb,
     )

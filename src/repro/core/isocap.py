@@ -11,7 +11,7 @@ from __future__ import annotations
 import dataclasses
 from collections.abc import Sequence
 
-from repro.core import traffic, tuner
+from repro.core import engine, traffic
 from repro.core.tech import Platform, GTX_1080TI
 from repro.core.traffic import EnergyReport
 from repro.core.workloads import Workload, paper_workloads
@@ -20,6 +20,14 @@ MEMS = ("sram", "stt", "sot")
 INFER_BATCH = 4
 TRAIN_BATCH = 64
 CAPACITY_MB = 3
+
+
+def designs_at(capacity_mb: float) -> dict[str, object]:
+    """EDAP-tuned designs for all technologies at one capacity, read from
+    the shared memoized batched sweep (one engine evaluation)."""
+    cap_bytes = int(capacity_mb * 2**20)
+    table = engine.design_table(tuple(MEMS), (cap_bytes,))
+    return {m: table.tuned(m, cap_bytes) for m in MEMS}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,7 +59,7 @@ def analyze(workloads: dict[str, Workload] | None = None,
             train_batch: int = TRAIN_BATCH) -> list[IsoCapRow]:
     """Figs. 3/4: per workload x {inference, training} x memory."""
     workloads = workloads if workloads is not None else paper_workloads()
-    designs = {m: tuner.tuned_design(m, capacity_mb) for m in MEMS}
+    designs = designs_at(capacity_mb)
     rows = []
     for w in workloads.values():
         for training, batch in ((False, infer_batch), (True, train_batch)):
@@ -68,7 +76,7 @@ def batch_sweep(workload: Workload, training: bool,
                 capacity_mb: float = CAPACITY_MB,
                 platform: Platform = GTX_1080TI) -> list[IsoCapRow]:
     """Fig. 5: EDP vs batch size (paper: AlexNet, 3 MB iso-capacity)."""
-    designs = {m: tuner.tuned_design(m, capacity_mb) for m in MEMS}
+    designs = designs_at(capacity_mb)
     rows = []
     for batch in batches:
         stats = traffic.build(workload, batch, training)

@@ -5,6 +5,11 @@ Each memory technology is EDAP-tuned independently at every capacity
 normalized energy / latency / EDP vs SRAM across all workloads — the
 paper's projection for the GPU L2 growth trend of Fig. 1 (and, in our
 hardware adaptation, for TPU-class on-chip buffer capacities).
+
+The whole (technology x capacity x organization) sweep is evaluated once
+on the batched engine as a shared memoized design table; ppa_sweep and
+workload_sweep both read tuned designs from it, and workload traffic
+statistics (capacity-independent) are built once per (workload, stage).
 """
 
 from __future__ import annotations
@@ -13,12 +18,18 @@ import dataclasses
 import statistics
 from collections.abc import Sequence
 
-from repro.core import traffic, tuner
+from repro.core import engine, traffic
 from repro.core.isocap import INFER_BATCH, TRAIN_BATCH, MEMS
 from repro.core.tech import Platform, GTX_1080TI
 from repro.core.workloads import Workload, paper_workloads
 
 CAPACITIES_MB = (1, 2, 4, 8, 16, 32)  # paper Algorithm 1's capacity set
+
+
+def tuned_table(capacities_mb: Sequence[float]) -> engine.DesignTable:
+    """The shared batched sweep for all technologies at these capacities."""
+    return engine.design_table(
+        tuple(MEMS), tuple(int(c * 2**20) for c in capacities_mb))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,10 +61,11 @@ class ScalingRow:
 
 
 def ppa_sweep(capacities_mb: Sequence[float] = CAPACITIES_MB) -> list[PPARow]:
+    table = tuned_table(capacities_mb)
     rows = []
     for cap in capacities_mb:
         for mem in MEMS:
-            d = tuner.tuned_design(mem, cap)
+            d = table.tuned(mem, int(cap * 2**20))
             rows.append(PPARow(
                 capacity_mb=cap, mem=mem,
                 read_latency_ns=d.read_latency_s * 1e9,
@@ -70,17 +82,25 @@ def workload_sweep(capacities_mb: Sequence[float] = CAPACITIES_MB,
                    workloads: dict[str, Workload] | None = None,
                    platform: Platform = GTX_1080TI) -> list[ScalingRow]:
     workloads = workloads if workloads is not None else paper_workloads()
+    table = tuned_table(capacities_mb)
+    # traffic statistics are capacity-independent: build once per stage
+    stage_stats = {
+        (training, batch): {name: traffic.build(w, batch, training)
+                            for name, w in workloads.items()}
+        for training, batch in ((False, INFER_BATCH), (True, TRAIN_BATCH))}
     rows = []
     for cap in capacities_mb:
-        designs = {m: tuner.tuned_design(m, cap) for m in MEMS}
+        designs = {m: table.tuned(m, int(cap * 2**20)) for m in MEMS}
         for training, batch in ((False, INFER_BATCH), (True, TRAIN_BATCH)):
-            stats = {name: traffic.build(w, batch, training)
-                     for name, w in workloads.items()}
+            stats = stage_stats[(training, batch)]
+            sram_reports = {name: traffic.energy(stats[name], designs["sram"],
+                                                 platform)
+                            for name in workloads}
             for mem in ("stt", "sot"):
                 ex, lx, ed = [], [], []
                 for name in workloads:
                     r_mem = traffic.energy(stats[name], designs[mem], platform)
-                    r_sram = traffic.energy(stats[name], designs["sram"], platform)
+                    r_sram = sram_reports[name]
                     ex.append(r_mem.total_j(False) / r_sram.total_j(False))
                     lx.append(r_mem.runtime_s / r_sram.runtime_s)
                     ed.append(r_mem.edp(True) / r_sram.edp(True))

@@ -27,7 +27,10 @@ per-transaction latency/energy, with a compute-overlap factor
 from __future__ import annotations
 
 import dataclasses
+import functools
 from collections.abc import Sequence
+
+import numpy as np
 
 from repro.core.cachemodel import LINE_BYTES, CacheDesign
 from repro.core.tech import Platform, GTX_1080TI
@@ -78,15 +81,37 @@ class TrafficStats:
     streams: tuple[AccessStream, ...]
     macs_per_batch: float
 
-    @property
-    def l2_read_tx(self) -> float:
-        return sum(s.bytes_total for s in self.streams
-                   if not s.is_write) / LINE_BYTES
+    # Structure-of-arrays view of the streams: the miss-curve fold runs
+    # vectorized, and the per-capacity DRAM curve is memoized (the stats
+    # are capacity-independent, so every cache design re-queries the same
+    # few capacities).  cached_property writes the instance __dict__
+    # directly, so it composes with the frozen dataclass.
 
-    @property
+    @functools.cached_property
+    def _arrays(self) -> dict[str, np.ndarray]:
+        return dict(
+            bytes_total=np.array([s.bytes_total for s in self.streams],
+                                 dtype=np.float64),
+            is_write=np.array([s.is_write for s in self.streams], dtype=bool),
+            reuse_distance=np.array([s.reuse_distance for s in self.streams],
+                                    dtype=np.float64),
+            dram_visible=np.array([not (s.is_write and not s.writeback)
+                                   for s in self.streams], dtype=bool),
+        )
+
+    @functools.cached_property
+    def _dram_tx_memo(self) -> dict[float, float]:
+        return {}
+
+    @functools.cached_property
+    def l2_read_tx(self) -> float:
+        a = self._arrays
+        return float(a["bytes_total"][~a["is_write"]].sum()) / LINE_BYTES
+
+    @functools.cached_property
     def l2_write_tx(self) -> float:
-        return sum(s.bytes_total for s in self.streams
-                   if s.is_write) / LINE_BYTES
+        a = self._arrays
+        return float(a["bytes_total"][a["is_write"]].sum()) / LINE_BYTES
 
     @property
     def read_write_ratio(self) -> float:
@@ -99,15 +124,17 @@ class TrafficStats:
         (RD / (RD + C_eff))^MISS_CURVE_P — a smooth capacity-miss curve
         (streaming accesses with RD=inf always miss); dirty write streams
         add write-back traffic on eviction with the same probability."""
-        c_eff = capacity_bytes * ASSOC_EFFICIENCY
-        tx = 0.0
-        for s in self.streams:
-            rd = s.reuse_distance
-            miss_p = 1.0 if rd == INF else (rd / (rd + c_eff)) ** MISS_CURVE_P
-            if s.is_write and not s.writeback:
-                continue
-            tx += s.bytes_total / LINE_BYTES * miss_p
-        return tx
+        memo = self._dram_tx_memo
+        if capacity_bytes not in memo:
+            a = self._arrays
+            c_eff = capacity_bytes * ASSOC_EFFICIENCY
+            rd = a["reuse_distance"]
+            with np.errstate(invalid="ignore"):
+                miss_p = np.where(np.isinf(rd), 1.0,
+                                  (rd / (rd + c_eff)) ** MISS_CURVE_P)
+            tx = a["bytes_total"] / LINE_BYTES * miss_p
+            memo[capacity_bytes] = float(tx[a["dram_visible"]].sum())
+        return memo[capacity_bytes]
 
 
 import math

@@ -7,17 +7,28 @@ that optimizes it; keep the nominee with the smallest EDAP.  This mirrors
 the paper's use of NVSim's optimization-target knob and guarantees each
 technology is compared at its own best configuration ("a fair comparison
 that encompasses all and not just one of the design constraint dimensions").
+
+Execution: the sweep itself runs on the batched engine (core/engine.py) —
+one jitted evaluation of the whole organization grid, then a masked argmin
+per (target, access).  ``tune_loop`` preserves the original scalar walk
+(one ``CacheModel.evaluate`` per design point) as the parity reference and
+the benchmark baseline.
 """
 
 from __future__ import annotations
 
+import functools
 from collections.abc import Callable, Iterable
 
+import numpy as np
+
+from repro.core import engine
 from repro.core.cachemodel import ASSOC  # noqa: F401  (re-export convenience)
 from repro.core.cachemodel import ACCESS_TYPES, CacheDesign, CacheModel
 from repro.core.calibration import ISO_AREA_TOLERANCE
 
-# NVSim optimization targets (paper Algorithm 1's set O).
+# NVSim optimization targets (paper Algorithm 1's set O).  The batched
+# selection (engine.DesignTable.tuned_index) follows this exact order.
 OPT_TARGETS: dict[str, Callable[[CacheDesign], float]] = {
     "read_latency": lambda d: d.read_latency_s,
     "write_latency": lambda d: d.write_latency_s,
@@ -31,8 +42,21 @@ OPT_TARGETS: dict[str, Callable[[CacheDesign], float]] = {
 
 
 def tune(model: CacheModel, capacity_bytes: int) -> CacheDesign:
-    """Algorithm 1 for one (mem, capacity): min-EDAP over target nominees."""
-    designs = [model.evaluate(capacity_bytes, org)
+    """Algorithm 1 for one (mem, capacity): min-EDAP over target nominees.
+
+    Evaluates the organization grid as a single-element-technology batch on
+    the engine, honoring the model's (possibly trial) bitcell/calibration —
+    the calibration fixed point calls this with unfitted multipliers.
+    """
+    table = engine.sweep((capacity_bytes,), mems=(model.mem,),
+                         cells=(model.cell,), cals=(model.cal,),
+                         node=model.node)
+    return table.tuned(model.mem, capacity_bytes)
+
+
+def tune_loop(model: CacheModel, capacity_bytes: int) -> CacheDesign:
+    """Original scalar Algorithm 1 (kept as parity/benchmark reference)."""
+    designs = [model.evaluate_scalar(capacity_bytes, org)
                for org in model.design_space(capacity_bytes)]
     if not designs:
         raise ValueError(f"empty design space at {capacity_bytes} bytes")
@@ -46,9 +70,16 @@ def tune(model: CacheModel, capacity_bytes: int) -> CacheDesign:
     return best
 
 
+@functools.lru_cache(maxsize=None)
+def _tuned_design_cached(mem: str, capacity_bytes: int) -> CacheDesign:
+    table = engine.design_table((mem,), (capacity_bytes,))
+    return table.tuned(mem, capacity_bytes)
+
+
 def tuned_design(mem: str, capacity_mb: float) -> CacheDesign:
-    """Convenience: EDAP-tuned design for `mem` at `capacity_mb`."""
-    return tune(CacheModel(mem), int(capacity_mb * 2**20))
+    """Convenience: EDAP-tuned design for `mem` at `capacity_mb` (memoized:
+    every caller of the same (mem, capacity) shares one tuned sweep)."""
+    return _tuned_design_cached(mem, int(capacity_mb * 2**20))
 
 
 def iso_area_capacity(mem: str, sram_capacity_mb: float = 3.0,
@@ -58,13 +89,18 @@ def iso_area_capacity(mem: str, sram_capacity_mb: float = 3.0,
     Paper §III-B scenario (ii): reuse the SRAM cache's area for a larger
     NVM cache.  Tolerance: the paper's own 10 MB SOT point is 5.64 mm^2 vs
     5.53 mm^2 SRAM (+2%), so the budget is 1.02x the SRAM area.
+
+    Area is organization-independent, so feasibility is one vectorized mask
+    over the engine's area row — no per-capacity tuning.
     """
     budget = tuned_design("sram", sram_capacity_mb).area_mm2 * ISO_AREA_TOLERANCE
-    feasible = [mb for mb in search_mb
-                if tuned_design(mem, mb).area_mm2 <= budget]
-    if not feasible:
+    search = tuple(search_mb)
+    caps_bytes = tuple(mb * 2**20 for mb in search)
+    areas = engine.design_table((mem,), caps_bytes).areas(mem)
+    feasible = np.asarray(search)[areas <= budget]
+    if feasible.size == 0:
         raise ValueError(f"no iso-area capacity for {mem}")
-    return max(feasible)
+    return int(feasible.max())
 
 
 def table2() -> dict[str, CacheDesign]:

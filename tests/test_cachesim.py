@@ -1,7 +1,10 @@
 """Property tests (hypothesis) for the cache simulator + traffic model."""
 
-import hypothesis.strategies as st
-from hypothesis import given, settings
+import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core.cachesim import (SetAssocCache, misses_at_capacity,
                                  stack_distance_profile)

@@ -1,0 +1,130 @@
+"""Parity tests: the batched engine vs the scalar CacheModel reference.
+
+The engine re-expresses every cachemodel.py equation as an array function;
+these tests pin the two implementations together — per-quantity values at
+sampled organizations, design-space membership, Algorithm 1 winners, the
+iso-area feasibility search, and the Table II entry points.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import engine, tuner
+from repro.core.cachemodel import ACCESS_TYPES, CacheModel, CacheOrg
+
+MEMS = ("sram", "stt", "sot")
+REL = 1e-12  # float64 agreement between the scalar and batched paths
+
+# organizations spread across the grid (plus both feasibility edges)
+SAMPLED_ORGS = [
+    CacheOrg(banks=1, rows=128, cols=256, access="normal"),
+    CacheOrg(banks=1, rows=128, cols=256, access="sequential"),
+    CacheOrg(banks=4, rows=512, cols=512, access="fast"),
+    CacheOrg(banks=8, rows=1024, cols=2048, access="normal"),
+    CacheOrg(banks=32, rows=256, cols=1024, access="sequential"),
+    CacheOrg(banks=16, rows=1024, cols=256, access="fast"),
+]
+
+QUANTITIES = ("read_latency_s", "write_latency_s", "read_energy_j",
+              "write_energy_j", "leakage_w", "area_mm2")
+
+
+@pytest.mark.parametrize("mem", MEMS)
+@pytest.mark.parametrize("cap_mb", [3, 16])
+def test_batched_matches_scalar_evaluate(mem, cap_mb):
+    model = CacheModel(mem)
+    cap = cap_mb * 2**20
+    batched = model.evaluate_batch(cap, SAMPLED_ORGS)
+    for org, b in zip(SAMPLED_ORGS, batched):
+        s = model.evaluate_scalar(cap, org)
+        for q in QUANTITIES:
+            assert getattr(b, q) == pytest.approx(getattr(s, q), rel=REL), \
+                f"{mem}/{cap_mb}MB/{org}: {q}"
+
+
+@pytest.mark.parametrize("mem", MEMS)
+def test_design_table_matches_scalar_evaluate(mem):
+    cap = 3 * 2**20
+    model = CacheModel(mem)
+    table = engine.design_table((mem,), (cap,))
+    for o in np.flatnonzero(table.valid[0])[::17]:  # every 17th valid org
+        b = table.design(mem, cap, int(o))
+        s = model.evaluate_scalar(cap, engine.ORGS[o])
+        for q in QUANTITIES:
+            assert getattr(b, q) == pytest.approx(getattr(s, q), rel=REL)
+
+
+@pytest.mark.parametrize("cap_mb", [1, 3, 8, 64])
+def test_valid_mask_matches_design_space(cap_mb):
+    cap = cap_mb * 2**20
+    scalar_orgs = set(CacheModel("stt").design_space(cap))
+    mask = engine.valid_mask(np.array([cap]))[0]
+    engine_orgs = {engine.ORGS[i] for i in np.flatnonzero(mask)}
+    assert engine_orgs == scalar_orgs
+
+
+@pytest.mark.parametrize("mem", MEMS)
+@pytest.mark.parametrize("cap_mb", [2, 3, 8])
+def test_tune_matches_scalar_loop(mem, cap_mb):
+    """Algorithm 1 winners identical between the two execution paths."""
+    model = CacheModel(mem)
+    cap = cap_mb * 2**20
+    batched = tuner.tune(model, cap)
+    loop = tuner.tune_loop(model, cap)
+    assert batched.org == loop.org
+    for q in QUANTITIES:
+        assert getattr(batched, q) == pytest.approx(getattr(loop, q), rel=REL)
+
+
+def test_iso_area_matches_loop_search():
+    """Vectorized feasibility mask == the original 64 sequential tunes."""
+    from repro.core.calibration import ISO_AREA_TOLERANCE
+    budget = tuner.tuned_design("sram", 3.0).area_mm2 * ISO_AREA_TOLERANCE
+    for mem in ("stt", "sot"):
+        model = CacheModel(mem)
+        loop = max(mb for mb in range(1, 65)
+                   if tuner.tune_loop(model, mb * 2**20).area_mm2 <= budget)
+        assert tuner.iso_area_capacity(mem) == loop
+
+
+def test_table2_winners_match_scalar_loop():
+    """The Table II entry point returns the same designs as the legacy path."""
+    t2 = tuner.table2()
+    for col, d in t2.items():
+        mem = col.split("_")[0]
+        loop = tuner.tune_loop(CacheModel(mem), d.capacity_bytes)
+        assert d.org == loop.org
+        assert d.read_latency_s == pytest.approx(loop.read_latency_s, rel=REL)
+        assert d.area_mm2 == pytest.approx(loop.area_mm2, rel=REL)
+
+
+def test_design_table_memoized():
+    t1 = engine.design_table(("stt",), (3 * 2**20,))
+    t2 = engine.design_table(("stt",), (3 * 2**20,))
+    assert t1 is t2
+
+
+def test_full_cross_product_consistent_with_single_tech_tables():
+    """Batch shape must not change values: [3, c, o] == stacked [1, 1, o]."""
+    caps = tuple(c * 2**20 for c in (1, 4, 32))
+    full = engine.design_table(MEMS, caps)
+    for mem in MEMS:
+        for cap in caps:
+            single = engine.design_table((mem,), (cap,))
+            a = full.tuned(mem, cap)
+            b = single.tuned(mem, cap)
+            assert a.org == b.org
+            for q in QUANTITIES:
+                # XLA may vectorize pow differently per batch shape: allow
+                # last-ulp drift, nothing more
+                assert getattr(a, q) == pytest.approx(getattr(b, q), rel=REL)
+
+
+def test_empty_design_space_raises():
+    table = engine.design_table(("stt",), (3 * 2**20,))
+    with pytest.raises(ValueError):
+        table.tuned("stt", 999)  # unknown capacity
+    tiny = engine.sweep((512,), mems=("stt",))
+    assert not tiny.valid.any()
+    with pytest.raises(ValueError):
+        tiny.tuned("stt", 512)

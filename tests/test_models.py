@@ -1,5 +1,7 @@
 """Per-arch smoke tests (reduced configs) + decode-vs-forward consistency."""
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,6 +11,17 @@ import repro.configs as configs
 from repro.models import lm as lm_mod
 
 ARCHS = configs.all_archs()
+
+
+@functools.lru_cache(maxsize=None)
+def _built(arch):
+    """Shared (cfg, model, params) per arch — eager init of the bigger
+    reduced configs is seconds each, and the three per-arch tests only
+    read the (immutable) params."""
+    cfg = configs.get(arch, reduced=True)
+    model = lm_mod.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
 
 
 def _batch_for(cfg, B, S, key):
@@ -25,9 +38,7 @@ def _batch_for(cfg, B, S, key):
 
 @pytest.mark.parametrize("arch", ARCHS)
 def test_smoke_forward_shapes_and_finite(arch):
-    cfg = configs.get(arch, reduced=True)
-    model = lm_mod.build(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+    cfg, model, params = _built(arch)
     B, S = 2, 32
     tokens, batch, kw = _batch_for(cfg, B, S, jax.random.PRNGKey(1))
     logits, aux, _ = model.forward(params, batch["tokens"], **kw)
@@ -37,11 +48,14 @@ def test_smoke_forward_shapes_and_finite(arch):
 
 @pytest.mark.parametrize("arch", ARCHS)
 def test_smoke_train_step(arch):
-    cfg = configs.get(arch, reduced=True)
-    model = lm_mod.build(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+    cfg, model, params = _built(arch)
     _, batch, _ = _batch_for(cfg, 2, 32, jax.random.PRNGKey(1))
-    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    # MoE: eager per-expert dispatch dwarfs the compile, so jit; for the
+    # small dense/ssm configs the compile is the slower path — stay eager
+    grad_fn = jax.value_and_grad(model.loss)
+    if cfg.moe is not None:
+        grad_fn = jax.jit(grad_fn)
+    loss, grads = grad_fn(params, batch)
     assert np.isfinite(float(loss))
     gleaves = jax.tree.leaves(grads)
     assert all(np.all(np.isfinite(np.asarray(g, np.float32)))
@@ -51,9 +65,7 @@ def test_smoke_train_step(arch):
 
 @pytest.mark.parametrize("arch", ARCHS)
 def test_decode_matches_forward(arch):
-    cfg = configs.get(arch, reduced=True)
-    model = lm_mod.build(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+    cfg, model, params = _built(arch)
     B, S = 2, 16
     tokens, _, kw = _batch_for(cfg, B, S, jax.random.PRNGKey(1))
     full, _, _ = model.forward(params, tokens, **kw)
@@ -69,8 +81,7 @@ def test_decode_matches_forward(arch):
 @pytest.mark.parametrize("arch", ["hymba-1.5b", "rwkv6-3b"])
 def test_subquadratic_state_is_constant_size(arch):
     """long_500k eligibility: decode state must not scale with context."""
-    cfg = configs.get(arch, reduced=True)
-    model = lm_mod.build(cfg)
+    cfg, model, _ = _built(arch)
     small = model.init_cache(1, 64)
     big = model.init_cache(1, 4096)
     small_b = sum(x.size * x.dtype.itemsize
@@ -87,18 +98,16 @@ def test_subquadratic_state_is_constant_size(arch):
 
 def test_multi_step_decode_consistency():
     """Greedy decode token-by-token equals teacher-forced forward."""
-    cfg = configs.get("tinyllama-1.1b", reduced=True)
-    model = lm_mod.build(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+    cfg, model, params = _built("tinyllama-1.1b")
     B, S = 1, 24
     tokens = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab)
     full, _, _ = model.forward(params, tokens)
     cache = model.init_cache(B, S)
     _, cache = model.prefill(params, tokens[:, :8], cache)
     outs = []
+    step_fn = jax.jit(model.decode_step)  # compiled once, 16 fast steps
     for i in range(8, S):
-        logits, cache = model.decode_step(params, tokens[:, i:i + 1],
-                                          cache, i)
+        logits, cache = step_fn(params, tokens[:, i:i + 1], cache, i)
         outs.append(np.asarray(logits[:, 0], np.float32))
     ref = np.asarray(full[:, 8:, :], np.float32)
     got = np.stack(outs, axis=1)

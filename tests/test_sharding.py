@@ -3,7 +3,10 @@
 import dataclasses
 
 import jax
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed import sharding

@@ -49,3 +49,11 @@ def test_batch_trends_match_fig5():
     tr = [traffic.build(w, b, True).read_write_ratio for b in (1, 16, 64)]
     assert inf[0] > inf[-1]
     assert tr[-1] > tr[0]
+
+
+def test_empty_stream_set_is_zero_traffic():
+    """The vectorized fold must degrade like the old generator sums."""
+    stats = traffic.TrafficStats("empty", 1, False, (), 0.0)
+    assert stats.l2_read_tx == 0.0
+    assert stats.l2_write_tx == 0.0
+    assert stats.dram_tx(3 * 2**20) == 0.0
