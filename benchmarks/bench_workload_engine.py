@@ -1,0 +1,213 @@
+"""Workload-engine benchmark: the fig3-10 workload fold, loop vs batched.
+
+Times the architecture-layer pass behind Figs. 3-10 — iso-capacity rows
+(Figs. 3/4), the batch sweep (Fig. 5), the DRAM reduction curve (Fig. 6),
+iso-area rows (Figs. 7/8), and the capacity scaling sweep (Figs. 9/10) —
+two ways:
+
+  loop     the pre-engine implementation: one scalar ``traffic.build`` +
+           ``traffic.energy`` / ``dram_tx`` call per (workload, stage,
+           memory, capacity), statistics rebuilt per analysis, exactly as
+           isocap/isoarea/scaling did before the workload engine;
+  batched  the rewired analyses — shared memoized TrafficStats and one
+           jitted [scenario] x [design] fold per analysis.
+
+Tuned cache designs (the circuit layer) are prefetched before either
+pass, so the comparison isolates the workload fold.  Cross-checks that
+the two paths produce the same rows, then writes the timing comparison to
+benchmarks/BENCH_workload_engine.json (run from the repo root).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import time
+
+from repro.core import isoarea, isocap, scaling, traffic, workload_engine
+from repro.core.isocap import (CAPACITY_MB, INFER_BATCH, TRAIN_BATCH,
+                               IsoCapRow, MEMS)
+from repro.core.scaling import CAPACITIES_MB, ScalingRow
+from repro.core.workloads import alexnet, paper_workloads
+
+JSON_PATH = "benchmarks/BENCH_workload_engine.json"
+REPS = 5
+BATCHES = (1, 2, 4, 8, 16, 32, 64)
+DRAM_CAPS_MB = (3, 6, 7, 10, 12, 24)
+STAGES = ((False, INFER_BATCH), (True, TRAIN_BATCH))
+
+
+# -- loop (pre-engine) implementations of the five figure passes -----------
+
+
+def _loop_stage_rows(designs: dict) -> list[IsoCapRow]:
+    """isocap/isoarea.analyze as the seed wrote them: fresh statistics and
+    one scalar energy fold per (workload, stage, memory)."""
+    rows = []
+    for w in paper_workloads().values():
+        for training, batch in STAGES:
+            stats = traffic.build(w, batch, training)
+            reports = {m: traffic.energy(stats, d)
+                       for m, d in designs.items()}
+            rows.append(IsoCapRow(w.name, training, batch, reports,
+                                  stats.read_write_ratio))
+    return rows
+
+
+def _loop_batch_sweep(designs: dict) -> list[IsoCapRow]:
+    rows = []
+    for training in (True, False):
+        for batch in BATCHES:
+            stats = traffic.build(alexnet(), batch, training)
+            reports = {m: traffic.energy(stats, d)
+                       for m, d in designs.items()}
+            rows.append(IsoCapRow(stats.workload, training, batch, reports,
+                                  stats.read_write_ratio))
+    return rows
+
+
+def _loop_dram_curve() -> dict[float, float]:
+    stats = traffic.build(alexnet(), INFER_BATCH, False)
+    base = stats.dram_tx(3 * 2**20)
+    return {c: 100.0 * (1.0 - stats.dram_tx(c * 2**20) / base)
+            for c in DRAM_CAPS_MB}
+
+
+def _loop_workload_sweep(table) -> list[ScalingRow]:
+    """scaling.workload_sweep before the rewire: scalar folds per
+    (capacity, stage, memory, workload)."""
+    workloads = paper_workloads()
+    stage_stats = {
+        (training, batch): {name: traffic.build(w, batch, training)
+                            for name, w in workloads.items()}
+        for training, batch in STAGES}
+    rows = []
+    for cap in CAPACITIES_MB:
+        designs = {m: table.tuned(m, int(cap * 2**20)) for m in MEMS}
+        for training, batch in STAGES:
+            stats = stage_stats[(training, batch)]
+            sram = {name: traffic.energy(stats[name], designs["sram"])
+                    for name in workloads}
+            for mem in ("stt", "sot"):
+                ex, lx, ed = [], [], []
+                for name in workloads:
+                    r_mem = traffic.energy(stats[name], designs[mem])
+                    r_sram = sram[name]
+                    ex.append(r_mem.total_j(False) / r_sram.total_j(False))
+                    lx.append(r_mem.runtime_s / r_sram.runtime_s)
+                    ed.append(r_mem.edp(True) / r_sram.edp(True))
+                rows.append(ScalingRow(
+                    capacity_mb=cap, mem=mem, training=training,
+                    energy_x=statistics.mean(ex),
+                    latency_x=statistics.mean(lx),
+                    edp_x=statistics.mean(ed),
+                    energy_std=statistics.pstdev(ex),
+                    edp_std=statistics.pstdev(ed),
+                ))
+    return rows
+
+
+def _loop_pass(iso_designs, area_designs, scaling_table):
+    return (_loop_stage_rows(iso_designs), _loop_batch_sweep(iso_designs),
+            _loop_dram_curve(), _loop_stage_rows(area_designs),
+            _loop_workload_sweep(scaling_table))
+
+
+def _batched_pass():
+    return (isocap.analyze(),
+            [r for t in (True, False)
+             for r in isocap.batch_sweep(alexnet(), t, BATCHES)],
+            isoarea.dram_reduction_curve(capacities_mb=DRAM_CAPS_MB),
+            isoarea.analyze(),
+            scaling.workload_sweep())
+
+
+# -- parity ----------------------------------------------------------------
+
+
+def _rel(a: float, b: float) -> float:
+    return abs(a - b) / abs(a) if a else abs(b)
+
+
+def _check_parity(loop_out, batched_out, rel=1e-9) -> float:
+    worst = 0.0
+    for loop, batched in zip(loop_out, batched_out):
+        if isinstance(loop, dict):  # the Fig. 6 curve
+            for cap, v in loop.items():
+                worst = max(worst, _rel(1.0 + v, 1.0 + batched[cap]))
+            continue
+        assert len(loop) == len(batched)
+        for a, b in zip(loop, batched):
+            if isinstance(a, IsoCapRow):
+                assert (a.workload, a.batch, a.training) == \
+                    (b.workload, b.batch, b.training)
+                for m in a.reports:
+                    for f in ("runtime_s", "dyn_read_j", "dyn_write_j",
+                              "leak_j", "dram_j"):
+                        worst = max(worst, _rel(getattr(a.reports[m], f),
+                                                getattr(b.reports[m], f)))
+            else:
+                assert (a.capacity_mb, a.mem, a.training) == \
+                    (b.capacity_mb, b.mem, b.training)
+                for f in ("energy_x", "latency_x", "edp_x"):
+                    worst = max(worst, _rel(getattr(a, f), getattr(b, f)))
+    assert worst < rel, worst
+    return worst
+
+
+def run() -> dict:
+    # prefetch the circuit layer so both paths time only the workload fold
+    iso_designs = isocap.designs_at(CAPACITY_MB)
+    area_designs = isoarea.designs().as_dict()
+    scaling_table = scaling.tuned_table(CAPACITIES_MB)
+
+    loop_times = []
+    for _ in range(2):
+        t0 = time.perf_counter()
+        loop_out = _loop_pass(iso_designs, area_designs, scaling_table)
+        loop_times.append(time.perf_counter() - t0)
+    loop_s = min(loop_times)
+
+    # batched: cold (includes jit compile of the fold kernels), then
+    # steady-state with the memoized stats/tables dropped each rep
+    workload_engine.clear_caches()
+    t0 = time.perf_counter()
+    batched_out = _batched_pass()
+    cold_s = time.perf_counter() - t0
+
+    batched_times = []
+    for _ in range(REPS):
+        workload_engine.clear_caches()  # keep the jit executable only
+        t0 = time.perf_counter()
+        batched_out = _batched_pass()
+        batched_times.append(time.perf_counter() - t0)
+    batched_s = min(batched_times)
+
+    worst = _check_parity(loop_out, batched_out)
+
+    n_scenarios = len(paper_workloads()) * 2 + 2 * len(BATCHES)
+    result = dict(
+        sweep="fig3-10 workload fold (isocap + batch + dram + isoarea + scaling)",
+        n_scenarios=n_scenarios,
+        n_designs=3 + 3 + len(CAPACITIES_MB) * len(MEMS),
+        loop_s=loop_s,
+        batched_cold_s=cold_s,
+        batched_s=batched_s,
+        speedup_x=loop_s / batched_s,
+        speedup_cold_x=loop_s / cold_s,
+        parity_max_rel_err=worst,
+    )
+    os.makedirs(os.path.dirname(JSON_PATH), exist_ok=True)
+    with open(JSON_PATH, "w") as f:
+        json.dump(result, f, indent=2)
+    return {"rows": [result],
+            "derived": (f"loop={loop_s*1e3:.0f}ms,"
+                        f"batched={batched_s*1e3:.0f}ms,"
+                        f"speedup={result['speedup_x']:.1f}x,"
+                        f"parity_err={worst:.2e}")}
+
+
+if __name__ == "__main__":
+    out = run()
+    print(out["derived"])

@@ -1,4 +1,7 @@
-"""Paper Figs. 3/4: iso-capacity dynamic/leakage energy and EDP."""
+"""Paper Figs. 3/4: iso-capacity dynamic/leakage energy and EDP.
+
+Rows are views into one batched [workload-stage] x [memory] fold on the
+workload engine (isocap.analyze) — no scalar per-combination calls."""
 
 from __future__ import annotations
 

@@ -1,4 +1,7 @@
-"""Paper Fig. 5: batch-size impact on EDP (AlexNet, iso-capacity)."""
+"""Paper Fig. 5: batch-size impact on EDP (AlexNet, iso-capacity).
+
+The batch axis is one scenario dimension of a single batched
+workload-engine fold (isocap.batch_sweep)."""
 
 from __future__ import annotations
 

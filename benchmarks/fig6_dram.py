@@ -1,4 +1,7 @@
-"""Paper Fig. 6: DRAM access reduction vs LLC capacity (iso-area)."""
+"""Paper Fig. 6: DRAM access reduction vs LLC capacity (iso-area).
+
+The curve is one batched [workload] x [capacity] miss-curve evaluation
+(workload_engine.dram_tx)."""
 
 from __future__ import annotations
 

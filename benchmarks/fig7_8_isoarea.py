@@ -1,4 +1,7 @@
-"""Paper Figs. 7/8: iso-area energy and EDP (with/without DRAM terms)."""
+"""Paper Figs. 7/8: iso-area energy and EDP (with/without DRAM terms).
+
+Rows are views into one batched [workload-stage] x [memory] fold at the
+iso-area design corners (isoarea.analyze)."""
 
 from __future__ import annotations
 

@@ -1,4 +1,8 @@
-"""Paper Figs. 9/10: scalability analysis (PPA + workload sweeps)."""
+"""Paper Figs. 9/10: scalability analysis (PPA + workload sweeps).
+
+Both sweeps are pairs of batched computations: the circuit engine's
+design table and the workload engine's [workload x stage] x [memory x
+capacity] fold (scaling.workload_sweep)."""
 
 from __future__ import annotations
 

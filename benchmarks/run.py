@@ -22,6 +22,7 @@ MODULES = (
     "fig9_10_scaling",
     "lm_nvm",
     "bench_engine",
+    "bench_workload_engine",
 )
 
 

@@ -1,9 +1,14 @@
 """Design-space exploration with DeepNVM++ (the paper's framework claim):
 sweep technology x capacity x workload and emit the EDP landscape.
 
+The whole pipeline is two composed batched computations: the circuit
+engine evaluates every (tech x capacity x organization) design point in
+one jitted call, and the workload engine folds every workload through
+every tuned (tech, capacity) design in a second one.
+
     PYTHONPATH=src python examples/nvm_dse.py
 """
-from repro.core import engine, traffic
+from repro.core import engine, workload_engine
 from repro.core.report import markdown_table
 from repro.core.workloads import paper_workloads
 
@@ -12,18 +17,23 @@ MEMS = ("sram", "stt", "sot")
 
 # the whole (tech x capacity x organization) space, one batched evaluation
 table = engine.design_table(MEMS, tuple(c * 2**20 for c in CAPS_MB))
+designs = tuple(table.tuned(m, cap * 2**20) for cap in CAPS_MB for m in MEMS)
+
+# every (workload x design) EDP, one batched workload-engine evaluation
+stats = [workload_engine.stats_for(w, 4, False)
+         for w in paper_workloads().values()]
+wt = workload_engine.evaluate(stats, designs)
+edp = wt.edp(include_dram=True)  # [workload, design]
 
 rows = []
-for cap in CAPS_MB:
-    designs = {m: table.tuned(m, cap * 2**20) for m in MEMS}
-    for wname, w in paper_workloads().items():
-        stats = traffic.build(w, batch=4, training=False)
-        base = traffic.energy(stats, designs["sram"])
-        for m in ("stt", "sot"):
-            rep = traffic.energy(stats, designs[m])
+for ci, cap in enumerate(CAPS_MB):
+    base = ci * len(MEMS)  # sram column of this capacity
+    for si, (wname, _, _) in enumerate(wt.scenarios):
+        for mi, m in enumerate(MEMS[1:], start=1):
             rows.append(dict(capacity_mb=cap, workload=wname, mem=m,
                              edp_reduction=round(
-                                 base.edp(True) / rep.edp(True), 2)))
+                                 float(edp[si, base] / edp[si, base + mi]),
+                                 2)))
 print(markdown_table(rows))
 best = max(rows, key=lambda r: r["edp_reduction"])
 print("\nbest design point:", best)

@@ -29,10 +29,11 @@ for m, d in designs.items():
           f"{rep.edp(True)*1e6:.2f} mJ*ms")
 
 # 4. the same question for an assigned LM architecture on TPU-class HW
-import os, sys
+import os  # noqa: E402  (repo root onto sys.path for benchmarks.lm_nvm)
+import sys  # noqa: E402
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-from benchmarks.lm_nvm import lm_traffic
-from repro.core.tech import TPU_V5E
+from benchmarks.lm_nvm import lm_traffic  # noqa: E402
+from repro.core.tech import TPU_V5E  # noqa: E402
 designs48 = {m: tuner.tuned_design(m, 48) for m in ("sram", "stt", "sot")}
 lm_stats = lm_traffic("tinyllama-1.1b", "decode_32k")
 base = traffic.energy(lm_stats, designs48["sram"], TPU_V5E)

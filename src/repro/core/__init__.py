@@ -3,7 +3,9 @@
 Layers (paper Fig. 2):
     mtj / bitcell      circuit-level device characterization   (Table I)
     cachemodel / tuner NVSim-style cache design + Alg. 1       (Table II)
+    engine             ... the circuit sweep as one batched computation
     workloads / traffic DL workload memory statistics          (SIII-C)
+    workload_engine    ... the workload fold as one batched computation
     cachesim           trace/analytic DRAM model               (SIII-D)
     isocap / isoarea / scaling   architecture-level analyses   (Figs 3-10)
 """
@@ -22,5 +24,6 @@ from repro.core import (  # noqa: F401
     tech,
     traffic,
     tuner,
+    workload_engine,
     workloads,
 )

@@ -18,6 +18,7 @@ concrete interleaved trace for cross-validation.
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import OrderedDict
 from collections.abc import Iterable, Sequence
 
@@ -37,6 +38,13 @@ class SetAssocCache:
     """Exact set-associative LRU write-back cache (one block granularity)."""
 
     def __init__(self, capacity_blocks: int, assoc: int = 16):
+        if capacity_blocks < 1:
+            raise ValueError(f"capacity_blocks must be >= 1, got {capacity_blocks}")
+        if assoc < 1:
+            raise ValueError(f"assoc must be >= 1, got {assoc}")
+        # capacity below one full set degrades to fully-associative at the
+        # available capacity (never to an empty set, which would make
+        # access() pop a victim from an empty OrderedDict)
         assoc = min(assoc, capacity_blocks)
         self.n_sets = max(1, capacity_blocks // assoc)
         self.assoc = assoc
@@ -72,17 +80,17 @@ def stack_distance_profile(trace: Sequence[int]) -> list[int]:
     O(N * unique) with a movable list; fine for the trace sizes we lower
     (the analytic model handles the big workloads)."""
     stack: list[int] = []
-    pos: dict[int, int] = {}
+    seen: set[int] = set()
     out: list[int] = []
     for block in trace:
-        if block in pos:
+        if block in seen:
             idx = stack.index(block)  # distance from the top
             out.append(idx)
             stack.pop(idx)
         else:
             out.append(-1)
+            seen.add(block)
         stack.insert(0, block)
-        pos[block] = 0
     return out
 
 
@@ -95,16 +103,28 @@ def trace_from_streams(streams, block_bytes: int = 4096,
                        max_blocks_per_stream: int = 512) -> list[tuple[int, bool]]:
     """Lower AccessStreams into a concrete interleaved block trace.
 
-    Each stream becomes a region of block ids touched sequentially; a
-    stream with reuse distance R is re-touched after ~R bytes of other
-    traffic.  Approximate by construction — used for cross-validating the
-    analytic dram_tx model on scaled-down workloads."""
-    trace: list[tuple[int, bool]] = []
+    Each stream becomes a region of block ids touched sequentially along a
+    byte timeline (the primary pass, streams laid out back to back); a
+    stream with finite reuse distance R re-touches each of its blocks R
+    bytes of primary traffic after the first touch, so a cache holding more
+    than ~R bytes turns the re-touch into a hit — the semantics the
+    analytic dram_tx miss curve assigns to R.  Streaming streams (R = inf)
+    are touched once and never again.  Approximate by construction — used
+    for cross-validating the analytic model on scaled-down workloads."""
+    events: list[tuple[float, int, int, bool]] = []  # (byte pos, seq, block, w)
     next_base = 0
+    pos = 0.0  # primary-pass byte cursor
+    seq = 0
     for s in streams:
         n = min(max_blocks_per_stream,
                 max(1, int(s.bytes_total // block_bytes)))
-        blocks = range(next_base, next_base + n)
+        for block in range(next_base, next_base + n):
+            events.append((pos, seq, block, s.is_write))
+            seq += 1
+            if math.isfinite(s.reuse_distance):
+                events.append((pos + s.reuse_distance, seq, block, s.is_write))
+                seq += 1
+            pos += block_bytes
         next_base += n
-        trace.extend((b, s.is_write) for b in blocks)
-    return trace
+    events.sort(key=lambda e: (e[0], e[1]))
+    return [(block, is_write) for _, _, block, is_write in events]

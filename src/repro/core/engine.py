@@ -263,13 +263,23 @@ class DesignTable:
         d = 0.5 * (self.read_latency_s[m, c] + self.write_latency_s[m, c])
         return e * d * self.area_mm2[m, c]
 
+    @functools.cached_property
+    def _tuned_memo(self) -> dict[tuple[str, int], int]:
+        # per-instance winner cache: every consumer (isocap/isoarea/scaling/
+        # benchmarks) re-queries the same few (mem, capacity) pairs
+        return {}
+
     def tuned_index(self, mem: str, capacity_bytes: int) -> int:
         """Algorithm 1: masked argmin per (target, access) -> min-EDAP nominee.
 
         Matches tuner's scalar loop exactly: the OPT_TARGETS metric order,
         the ACCESS_TYPES pool order, first-occurrence argmin within each
-        pool, and strict-< EDAP tie-breaking across nominees.
+        pool, and strict-< EDAP tie-breaking across nominees.  Memoized per
+        (mem, capacity) on the table instance.
         """
+        memo = self._tuned_memo
+        if (mem, capacity_bytes) in memo:
+            return memo[mem, capacity_bytes]
         m, c = self._mc(mem, capacity_bytes)
         if not self.valid[c].any():
             raise ValueError(
@@ -291,6 +301,7 @@ class DesignTable:
                 nominee = int(np.argmin(np.where(pool, metric, np.inf)))
                 if best < 0 or edap[nominee] < edap[best]:
                     best = nominee
+        memo[mem, capacity_bytes] = best
         return best
 
     def tuned(self, mem: str, capacity_bytes: int) -> CacheDesign:

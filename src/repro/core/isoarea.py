@@ -5,6 +5,10 @@ the 3 MB SRAM area budget (7 MB STT / 10 MB SOT, from the tuner's area
 model).  The larger capacity reduces DRAM traffic (Fig. 6 — GPGPU-Sim in
 the paper, the reuse-distance model here), which is where iso-area MRAM
 wins: slower, bigger caches, but far fewer costly off-chip accesses.
+
+Figs. 6-8 are read from batched workload-engine folds: the DRAM curve is
+one [workload] x [capacity] miss-curve evaluation and the energy/EDP rows
+one [workload-stage] x [memory] evaluation against the iso-area designs.
 """
 
 from __future__ import annotations
@@ -12,8 +16,9 @@ from __future__ import annotations
 import dataclasses
 from collections.abc import Sequence
 
-from repro.core import engine, traffic, tuner
-from repro.core.isocap import IsoCapRow, INFER_BATCH, TRAIN_BATCH
+from repro.core import engine, tuner, workload_engine
+from repro.core.isocap import (IsoCapRow, INFER_BATCH, TRAIN_BATCH,
+                               _stage_rows)
 from repro.core.tech import Platform, GTX_1080TI
 from repro.core.workloads import Workload, paper_workloads, alexnet
 
@@ -53,28 +58,22 @@ def dram_reduction_curve(workload: Workload | None = None, batch: int = INFER_BA
     """Fig. 6: % reduction in DRAM accesses vs the 3 MB baseline as the
     last-level cache grows (paper: AlexNet via GPGPU-Sim/DarkNet)."""
     w = workload if workload is not None else alexnet()
-    stats = traffic.build(w, batch, training)
-    base = stats.dram_tx(3 * 2**20)
-    return {c: 100.0 * (1.0 - stats.dram_tx(c * 2**20) / base)
-            for c in capacities_mb}
+    stats = workload_engine.stats_for(w, batch, training)
+    caps = (3,) + tuple(capacities_mb)
+    tx = workload_engine.dram_tx([stats], [c * 2**20 for c in caps])[0]
+    return {c: 100.0 * (1.0 - float(tx[1 + i] / tx[0]))
+            for i, c in enumerate(capacities_mb)}
 
 
 def analyze(workloads: dict[str, Workload] | None = None,
             platform: Platform = GTX_1080TI,
             infer_batch: int = INFER_BATCH,
             train_batch: int = TRAIN_BATCH) -> list[IsoCapRow]:
-    """Figs. 7/8: energy and EDP at iso-area (with/without DRAM terms)."""
+    """Figs. 7/8: energy and EDP at iso-area (with/without DRAM terms) —
+    one batched [workload-stage] x [memory] fold at the iso-area corners."""
     workloads = workloads if workloads is not None else paper_workloads()
-    d = designs().as_dict()
-    rows = []
-    for w in workloads.values():
-        for training, batch in ((False, infer_batch), (True, train_batch)):
-            stats = traffic.build(w, batch, training)
-            reports = {m: traffic.energy(stats, dsn, platform)
-                       for m, dsn in d.items()}
-            rows.append(IsoCapRow(w.name, training, batch, reports,
-                                  stats.read_write_ratio))
-    return rows
+    return _stage_rows(workloads, designs().as_dict(), platform,
+                       infer_batch, train_batch)
 
 
 def summary(rows: list[IsoCapRow]) -> dict[str, dict[str, float]]:

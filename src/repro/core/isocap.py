@@ -4,6 +4,10 @@ Same cache capacity (3 MB) for SRAM, STT-MRAM, SOT-MRAM; workload memory
 statistics from the traffic model; outputs normalized dynamic/leakage
 energy breakdowns, total energy, and EDP per workload for inference
 (batch 4) and training (batch 64), plus the batch-size sweep of Fig. 5.
+
+All rows are read from one batched [workload-stage] x [memory] evaluation
+on the workload engine (core/workload_engine.py) — no per-(workload,
+memory) scalar traffic.energy calls.
 """
 
 from __future__ import annotations
@@ -11,7 +15,7 @@ from __future__ import annotations
 import dataclasses
 from collections.abc import Sequence
 
-from repro.core import engine, traffic
+from repro.core import engine, workload_engine
 from repro.core.tech import Platform, GTX_1080TI
 from repro.core.traffic import EnergyReport
 from repro.core.workloads import Workload, paper_workloads
@@ -52,39 +56,50 @@ class IsoCapRow:
         return get(self.reports[mem]) / get(self.reports["sram"])
 
 
+def _rows_from_table(table: workload_engine.WorkloadTable) -> list[IsoCapRow]:
+    """Materialize one IsoCapRow per scenario from a batched fold."""
+    ratios = table.read_write_ratio
+    return [IsoCapRow(workload, training, batch, table.reports(i),
+                      float(ratios[i]))
+            for i, (workload, batch, training) in enumerate(table.scenarios)]
+
+
+def _stage_rows(workloads: dict[str, Workload], designs: dict,
+                platform: Platform, infer_batch: int,
+                train_batch: int) -> list[IsoCapRow]:
+    """One batched [workload-stage] x [memory] fold, as IsoCapRows —
+    shared by the iso-capacity and iso-area analyses."""
+    stats = [workload_engine.stats_for(w, batch, training)
+             for w in workloads.values()
+             for training, batch in ((False, infer_batch),
+                                     (True, train_batch))]
+    table = workload_engine.evaluate(stats, tuple(designs.values()), platform)
+    return _rows_from_table(table)
+
+
 def analyze(workloads: dict[str, Workload] | None = None,
             capacity_mb: float = CAPACITY_MB,
             platform: Platform = GTX_1080TI,
             infer_batch: int = INFER_BATCH,
             train_batch: int = TRAIN_BATCH) -> list[IsoCapRow]:
-    """Figs. 3/4: per workload x {inference, training} x memory."""
+    """Figs. 3/4: per workload x {inference, training} x memory — one
+    batched [workload-stage] x [memory] evaluation."""
     workloads = workloads if workloads is not None else paper_workloads()
-    designs = designs_at(capacity_mb)
-    rows = []
-    for w in workloads.values():
-        for training, batch in ((False, infer_batch), (True, train_batch)):
-            stats = traffic.build(w, batch, training)
-            reports = {m: traffic.energy(stats, d, platform)
-                       for m, d in designs.items()}
-            rows.append(IsoCapRow(w.name, training, batch, reports,
-                                  stats.read_write_ratio))
-    return rows
+    return _stage_rows(workloads, designs_at(capacity_mb), platform,
+                       infer_batch, train_batch)
 
 
 def batch_sweep(workload: Workload, training: bool,
                 batches: Sequence[int] = (1, 2, 4, 8, 16, 32, 64),
                 capacity_mb: float = CAPACITY_MB,
                 platform: Platform = GTX_1080TI) -> list[IsoCapRow]:
-    """Fig. 5: EDP vs batch size (paper: AlexNet, 3 MB iso-capacity)."""
+    """Fig. 5: EDP vs batch size (paper: AlexNet, 3 MB iso-capacity) — the
+    batch axis is one scenario dimension of the batched fold."""
     designs = designs_at(capacity_mb)
-    rows = []
-    for batch in batches:
-        stats = traffic.build(workload, batch, training)
-        reports = {m: traffic.energy(stats, d, platform)
-                   for m, d in designs.items()}
-        rows.append(IsoCapRow(workload.name, training, batch, reports,
-                              stats.read_write_ratio))
-    return rows
+    stats = [workload_engine.stats_for(workload, batch, training)
+             for batch in batches]
+    table = workload_engine.evaluate(stats, tuple(designs.values()), platform)
+    return _rows_from_table(table)
 
 
 def summary(rows: list[IsoCapRow]) -> dict[str, dict[str, float]]:

@@ -7,9 +7,11 @@ paper's projection for the GPU L2 growth trend of Fig. 1 (and, in our
 hardware adaptation, for TPU-class on-chip buffer capacities).
 
 The whole (technology x capacity x organization) sweep is evaluated once
-on the batched engine as a shared memoized design table; ppa_sweep and
-workload_sweep both read tuned designs from it, and workload traffic
-statistics (capacity-independent) are built once per (workload, stage).
+on the batched circuit engine as a shared memoized design table; ppa_sweep
+and workload_sweep both read tuned designs from it.  workload_sweep then
+folds every (workload, stage) scenario through every tuned (memory,
+capacity) design in one batched workload-engine evaluation — the pipeline
+is two composed batched computations, no scalar per-combination calls.
 """
 
 from __future__ import annotations
@@ -18,7 +20,7 @@ import dataclasses
 import statistics
 from collections.abc import Sequence
 
-from repro.core import engine, traffic
+from repro.core import engine, workload_engine
 from repro.core.isocap import INFER_BATCH, TRAIN_BATCH, MEMS
 from repro.core.tech import Platform, GTX_1080TI
 from repro.core.workloads import Workload, paper_workloads
@@ -81,29 +83,32 @@ def ppa_sweep(capacities_mb: Sequence[float] = CAPACITIES_MB) -> list[PPARow]:
 def workload_sweep(capacities_mb: Sequence[float] = CAPACITIES_MB,
                    workloads: dict[str, Workload] | None = None,
                    platform: Platform = GTX_1080TI) -> list[ScalingRow]:
+    """One batched [workload x stage] x [memory x capacity] fold on the
+    workload engine, then per-(capacity, stage, memory) reductions over the
+    result tensors."""
     workloads = workloads if workloads is not None else paper_workloads()
     table = tuned_table(capacities_mb)
-    # traffic statistics are capacity-independent: build once per stage
-    stage_stats = {
-        (training, batch): {name: traffic.build(w, batch, training)
-                            for name, w in workloads.items()}
-        for training, batch in ((False, INFER_BATCH), (True, TRAIN_BATCH))}
+    stages = ((False, INFER_BATCH), (True, TRAIN_BATCH))
+    stats = [workload_engine.stats_for(w, batch, training)
+             for training, batch in stages for w in workloads.values()]
+    designs = tuple(table.tuned(m, int(cap * 2**20))
+                    for cap in capacities_mb for m in MEMS)
+    wt = workload_engine.evaluate(stats, designs, platform)
+
+    energy = wt.total_j(False)   # [s, d]
+    latency = wt.runtime_s
+    edp = wt.edp(True)
+    n_wl = len(workloads)
     rows = []
-    for cap in capacities_mb:
-        designs = {m: table.tuned(m, int(cap * 2**20)) for m in MEMS}
-        for training, batch in ((False, INFER_BATCH), (True, TRAIN_BATCH)):
-            stats = stage_stats[(training, batch)]
-            sram_reports = {name: traffic.energy(stats[name], designs["sram"],
-                                                 platform)
-                            for name in workloads}
+    for ci, cap in enumerate(capacities_mb):
+        d_of = {m: ci * len(MEMS) + mi for mi, m in enumerate(MEMS)}
+        for si, (training, batch) in enumerate(stages):
+            s_ids = slice(si * n_wl, (si + 1) * n_wl)
             for mem in ("stt", "sot"):
-                ex, lx, ed = [], [], []
-                for name in workloads:
-                    r_mem = traffic.energy(stats[name], designs[mem], platform)
-                    r_sram = sram_reports[name]
-                    ex.append(r_mem.total_j(False) / r_sram.total_j(False))
-                    lx.append(r_mem.runtime_s / r_sram.runtime_s)
-                    ed.append(r_mem.edp(True) / r_sram.edp(True))
+                m, s = d_of[mem], d_of["sram"]
+                ex = (energy[s_ids, m] / energy[s_ids, s]).tolist()
+                lx = (latency[s_ids, m] / latency[s_ids, s]).tolist()
+                ed = (edp[s_ids, m] / edp[s_ids, s]).tolist()
                 rows.append(ScalingRow(
                     capacity_mb=cap, mem=mem, training=training,
                     energy_x=statistics.mean(ex),

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from collections.abc import Sequence
 
 import numpy as np
@@ -137,9 +138,6 @@ class TrafficStats:
         return memo[capacity_bytes]
 
 
-import math
-
-
 def _gemm_amp_weights(layer) -> float:
     """Times the weight matrix is re-read from L2: once per N-dim tile."""
     n = layer.hout * layer.wout if layer.kind == "conv" else 1
@@ -203,12 +201,13 @@ def _backward_streams(layer, batch: int) -> list[AccessStream]:
     per_image_ws = col + dx + dy + layer.weight_bytes
     w_rd = b * layer.weight_bytes if layer.kind == "conv" else layer.weight_bytes
     amp_w = _gemm_amp_weights(layer)
-    out = [
-        # dgrad: dX = W^T dY  (weights re-read per input tile, as forward)
-        AccessStream(f"{layer.name}.bw.w", w_rd, False,
-                     per_image_ws if layer.kind == "conv" else INF),
-        AccessStream(f"{layer.name}.bw.w+", w_rd * (amp_w - 1), False,
-                     TILE_REUSE_RD),
+    # dgrad: dX = W^T dY  (weights re-read per input tile, as forward)
+    out = [AccessStream(f"{layer.name}.bw.w", w_rd, False,
+                        per_image_ws if layer.kind == "conv" else INF)]
+    if amp_w > 1:  # same guard as forward: no zero-byte stream at amp_w == 1
+        out.append(AccessStream(f"{layer.name}.bw.w+", w_rd * (amp_w - 1),
+                                False, TILE_REUSE_RD))
+    out += [
         AccessStream(f"{layer.name}.bw.dy", b * dy * 2.0, False, dy + col),
         AccessStream(f"{layer.name}.bw.dx", b * dx, True, dx + col),
         # wgrad: dW = dY col^T — col rebuilt from saved activations
@@ -244,6 +243,10 @@ def build(workload: Workload, batch: int, training: bool) -> TrafficStats:
             streams.extend(_backward_streams(layer, batch))
         streams.extend(_optimizer_streams(workload))
         macs *= 3.0  # fwd + dgrad + wgrad
+    # zero-byte streams would pollute the SoA fold arrays and the padded
+    # batched tensors (workload_engine) with degenerate entries
+    assert all(s.bytes_total > 0 for s in streams), \
+        [s.label for s in streams if s.bytes_total <= 0]
     return TrafficStats(workload.name, batch, training, tuple(streams), macs)
 
 

@@ -1,0 +1,335 @@
+"""Batched workload-evaluation engine — the architecture-layer fold as one
+tensor computation.
+
+core/engine.py batches the circuit layer (the NVSim tech x capacity x
+organization sweep); this module batches the layer DeepNVM++ stacks on top
+of it: folding workload memory traffic through tuned cache designs to get
+runtime, dynamic/leakage/DRAM energy, and EDP (paper Figs. 3-10).  The
+scalar path (``traffic.runtime`` / ``traffic.energy``, one call per
+(workload, memory, capacity)) survives as the parity reference, pinned by
+tests/test_workload_engine.py to a few ulps.
+
+Representation: structure-of-arrays, padded.  Every scenario — one
+``TrafficStats``, i.e. one (workload, batch, training) execution — packs
+its ``AccessStream`` tuple into rows of four [scenario, stream] tensors
+(``bytes_total``, ``is_write``, ``reuse_distance``, ``dram_visible``) with
+a stream-count ``mask`` marking real entries (padding rows carry zero
+bytes, infinite reuse distance, and a False mask, so they contribute
+nothing to any fold).  Designs — (memory, capacity) points read from
+``engine.DesignTable`` — pack into five [design] vectors.  One jitted
+float64 kernel then evaluates the full cross product
+
+    [scenario] x [design]  ->  runtime / energy / EDP tensors [s, d]
+
+reproducing the scalar path's operation order exactly: the miss-curve
+``dram_tx`` fold, the \"simple model\" runtime (compute + serialized L2 +
+DRAM stall), and the dynamic/leakage/DRAM energy terms.
+
+:class:`WorkloadTable` wraps the result tensors with the same vocabulary
+the scalar API uses (``total_j``/``edp``/``EnergyReport``), and
+``evaluate`` memoizes tables per (scenarios, designs, platform) so the
+iso-capacity, iso-area, and scaling analyses plus the benchmarks all share
+one evaluation — the whole cross-layer pipeline becomes two composed
+batched computations (circuit sweep, workload fold).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections.abc import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from repro.core import traffic
+from repro.core.cachemodel import LINE_BYTES, CacheDesign
+from repro.core.tech import Platform, GTX_1080TI
+from repro.core.traffic import (
+    ASSOC_EFFICIENCY,
+    COMPUTE_EFFICIENCY,
+    MISS_CURVE_P,
+    EnergyReport,
+    TrafficStats,
+)
+from repro.core.workloads import Workload
+
+# Platform parameters consumed by the fold, in the order they are packed
+# into the platform vector (a runtime input, so a different platform —
+# e.g. TPU_V5E — does not recompile the kernel).
+PLATFORM_FIELDS = ("peak_flops", "mem_serialization", "dram_bw",
+                   "dram_energy_per_byte")
+
+@functools.lru_cache(maxsize=None)
+def stats_for(workload: Workload, batch: int, training: bool) -> TrafficStats:
+    """Memoized ``traffic.build`` — scenarios are shared across analyses."""
+    return traffic.build(workload, batch, training)
+
+
+# ---------------------------------------------------------------------------
+# Packing: AccessStreams -> padded SoA tensors, designs -> vectors
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class StreamBatch:
+    """Padded structure-of-arrays pack of many scenarios' AccessStreams."""
+
+    keys: tuple[tuple[str, int, bool], ...]  # (workload, batch, training)
+    bytes_total: np.ndarray     # [s, k] float64, padded 0.0
+    is_write: np.ndarray        # [s, k] bool,    padded False
+    reuse_distance: np.ndarray  # [s, k] float64, padded inf
+    dram_visible: np.ndarray    # [s, k] bool,    padded False
+    mask: np.ndarray            # [s, k] bool — True on real streams
+    macs: np.ndarray            # [s] float64
+
+
+def pack(stats_seq: Sequence[TrafficStats]) -> StreamBatch:
+    """Pack scenarios into padded [scenario, stream] tensors."""
+    stats_seq = tuple(stats_seq)
+    k = max(len(s.streams) for s in stats_seq)
+    n = len(stats_seq)
+    bytes_total = np.zeros((n, k), dtype=np.float64)
+    is_write = np.zeros((n, k), dtype=bool)
+    reuse = np.full((n, k), np.inf, dtype=np.float64)
+    visible = np.zeros((n, k), dtype=bool)
+    mask = np.zeros((n, k), dtype=bool)
+    for i, stats in enumerate(stats_seq):
+        a = stats._arrays
+        m = len(stats.streams)
+        bytes_total[i, :m] = a["bytes_total"]
+        is_write[i, :m] = a["is_write"]
+        reuse[i, :m] = a["reuse_distance"]
+        visible[i, :m] = a["dram_visible"]
+        mask[i, :m] = True
+    return StreamBatch(
+        keys=tuple((s.workload, s.batch, s.training) for s in stats_seq),
+        bytes_total=bytes_total, is_write=is_write, reuse_distance=reuse,
+        dram_visible=visible, mask=mask,
+        macs=np.array([s.macs_per_batch for s in stats_seq],
+                      dtype=np.float64),
+    )
+
+
+def _design_vectors(designs: Sequence[CacheDesign]) -> tuple[np.ndarray, ...]:
+    def as_vec(field: str) -> np.ndarray:
+        return np.array([getattr(d, field) for d in designs], dtype=np.float64)
+
+    return (as_vec("read_latency_s"), as_vec("write_latency_s"),
+            as_vec("read_energy_j"), as_vec("write_energy_j"),
+            as_vec("leakage_w"), as_vec("capacity_bytes"))
+
+
+def _platform_vector(platform: Platform) -> np.ndarray:
+    return np.array([getattr(platform, f) for f in PLATFORM_FIELDS],
+                    dtype=np.float64)
+
+
+# ---------------------------------------------------------------------------
+# The jitted fold
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _miss_tx_kernel(bytes_total, rd, visible, caps):
+    """[s, c] DRAM transactions — TrafficStats.dram_tx's fold, batched.
+
+    Each stream misses with probability (RD / (RD + C_eff))^MISS_CURVE_P
+    (RD=inf always misses); only DRAM-visible streams count.
+    """
+    c_eff = caps * ASSOC_EFFICIENCY                       # [c]
+    r = rd[:, None, :]                                    # [s, 1, k]
+    ratio = r / (r + c_eff[None, :, None])
+    miss_p = jnp.where(jnp.isinf(r), 1.0, ratio ** MISS_CURVE_P)
+    tx = bytes_total[:, None, :] / LINE_BYTES * miss_p
+    return jnp.where(visible[:, None, :], tx, 0.0).sum(axis=2)
+
+
+@jax.jit
+def _fold_kernel(bytes_total, is_write, rd, visible, mask, macs,
+                 rl, wl, re_, we_, leak, caps, pvec):
+    """The full [scenario] x [design] workload fold.
+
+    Streams [s, k], designs [d], platform [4] -> metric tensors [s, d].
+    Every expression keeps the scalar traffic.runtime/energy operation
+    order so float64 results match the Python reference to the last ulps.
+    """
+    peak_flops, serialization, dram_bw, dram_epb = pvec
+    bt = jnp.where(mask, bytes_total, 0.0)
+    read_tx = jnp.where(is_write, 0.0, bt).sum(axis=1) / LINE_BYTES   # [s]
+    write_tx = jnp.where(is_write, bt, 0.0).sum(axis=1) / LINE_BYTES
+    dram_tx = _miss_tx_kernel(bt, rd, visible & mask, caps)           # [s, d]
+
+    t_compute = macs * 2.0 / (peak_flops * COMPUTE_EFFICIENCY)        # [s]
+    t_l2 = read_tx[:, None] * rl[None, :] + write_tx[:, None] * wl[None, :]
+    runtime_nodram = t_compute[:, None] + serialization * t_l2
+    runtime = runtime_nodram + dram_tx * LINE_BYTES / dram_bw
+
+    return dict(
+        l2_read_tx=read_tx,
+        l2_write_tx=write_tx,
+        dram_tx=dram_tx,
+        runtime_s=runtime,
+        runtime_nodram_s=runtime_nodram,
+        dyn_read_j=read_tx[:, None] * re_[None, :],
+        dyn_write_j=write_tx[:, None] * we_[None, :],
+        leak_j=leak[None, :] * runtime,
+        leak_nodram_j=leak[None, :] * runtime_nodram,
+        dram_j=dram_tx * LINE_BYTES * dram_epb,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Result table
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class WorkloadTable:
+    """Evaluated [scenario] x [design] workload fold.
+
+    Scenario axis: (workload, batch, training) keys in pack order.  Design
+    axis: the CacheDesign points (typically EDAP-tuned reads of an
+    ``engine.DesignTable``).  ``runtime_s``/``leak_j`` include the DRAM
+    stall term (the scalar path's ``include_dram=True`` default); the
+    ``*_nodram`` variants mirror ``include_dram=False``.
+    """
+
+    scenarios: tuple[tuple[str, int, bool], ...]
+    designs: tuple[CacheDesign, ...]
+    platform: Platform
+    l2_read_tx: np.ndarray      # [s]
+    l2_write_tx: np.ndarray     # [s]
+    dram_tx: np.ndarray         # [s, d]
+    runtime_s: np.ndarray       # [s, d]
+    runtime_nodram_s: np.ndarray
+    dyn_read_j: np.ndarray
+    dyn_write_j: np.ndarray
+    leak_j: np.ndarray
+    leak_nodram_j: np.ndarray
+    dram_j: np.ndarray
+
+    # -- indexing ----------------------------------------------------------
+
+    def scenario_index(self, workload: str, batch: int, training: bool) -> int:
+        return self.scenarios.index((workload, batch, training))
+
+    def design_index(self, mem: str, capacity_bytes: int | None = None) -> int:
+        matches = [j for j, d in enumerate(self.designs)
+                   if d.mem == mem
+                   and capacity_bytes in (None, d.capacity_bytes)]
+        if not matches:
+            raise ValueError(f"no design ({mem}, {capacity_bytes}) in table")
+        if len(matches) > 1 and capacity_bytes is None:
+            raise ValueError(
+                f"{mem!r} appears at several capacities; pass capacity_bytes")
+        return matches[0]
+
+    @property
+    def read_write_ratio(self) -> np.ndarray:
+        return self.l2_read_tx / np.maximum(1.0, self.l2_write_tx)
+
+    # -- derived metric tensors (scalar EnergyReport operation order) ------
+
+    @property
+    def dyn_j(self) -> np.ndarray:
+        return self.dyn_read_j + self.dyn_write_j
+
+    def total_j(self, include_dram: bool = False) -> np.ndarray:
+        total = self.dyn_j + self.leak_j
+        return total + self.dram_j if include_dram else total
+
+    def edp(self, include_dram: bool = False) -> np.ndarray:
+        return self.total_j(include_dram) * self.runtime_s
+
+    def metric(self, name: str, include_dram: bool = False) -> np.ndarray:
+        """[s, d] tensor of one IsoCapRow.norm metric."""
+        return {
+            "dyn": lambda: self.dyn_j,
+            "leak": lambda: self.leak_j,
+            "energy": lambda: self.total_j(include_dram),
+            "edp": lambda: self.edp(include_dram),
+            "runtime": lambda: self.runtime_s,
+        }[name]()
+
+    def norm(self, name: str, mem: str, baseline: str = "sram",
+             include_dram: bool = False) -> np.ndarray:
+        """[s] metric of `mem`'s design normalized to the baseline design
+        (the paper's figure convention; designs looked up by memory)."""
+        m = self.metric(name, include_dram)
+        return m[:, self.design_index(mem)] / m[:, self.design_index(baseline)]
+
+    # -- scalar-API materialization ----------------------------------------
+
+    def report(self, scenario_index: int, design_index: int) -> EnergyReport:
+        """One (scenario, design) cell as the scalar-API EnergyReport."""
+        s, d = scenario_index, design_index
+        return EnergyReport(
+            workload=self.scenarios[s][0],
+            mem=self.designs[d].mem,
+            runtime_s=float(self.runtime_s[s, d]),
+            dyn_read_j=float(self.dyn_read_j[s, d]),
+            dyn_write_j=float(self.dyn_write_j[s, d]),
+            leak_j=float(self.leak_j[s, d]),
+            dram_j=float(self.dram_j[s, d]),
+        )
+
+    def reports(self, scenario_index: int) -> dict[str, EnergyReport]:
+        """All designs of one scenario, keyed by memory technology (the
+        IsoCapRow shape — requires memory-unique designs)."""
+        out = {d.mem: self.report(scenario_index, j)
+               for j, d in enumerate(self.designs)}
+        if len(out) != len(self.designs):
+            raise ValueError("designs are not memory-unique; key by index")
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Evaluation entry points (memoized, like engine.design_table)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _evaluate_cached(stats_seq: tuple[TrafficStats, ...],
+                     designs: tuple[CacheDesign, ...],
+                     platform: Platform) -> WorkloadTable:
+    batch = pack(stats_seq)
+    rl, wl, re_, we_, leak, caps = _design_vectors(designs)
+    with enable_x64():
+        out = _fold_kernel(batch.bytes_total, batch.is_write,
+                           batch.reuse_distance, batch.dram_visible,
+                           batch.mask, batch.macs,
+                           rl, wl, re_, we_, leak, caps,
+                           _platform_vector(platform))
+    return WorkloadTable(
+        scenarios=batch.keys, designs=designs, platform=platform,
+        **{k: np.asarray(v) for k, v in out.items()})
+
+
+def evaluate(stats_seq: Sequence[TrafficStats],
+             designs: Sequence[CacheDesign],
+             platform: Platform = GTX_1080TI) -> WorkloadTable:
+    """Evaluate the [scenario] x [design] cross product as one batched
+    computation.  Memoized per (scenarios, designs, platform), so every
+    consumer of the same fold shares one kernel invocation."""
+    return _evaluate_cached(tuple(stats_seq), tuple(designs), platform)
+
+
+def dram_tx(stats_seq: Sequence[TrafficStats],
+            capacities_bytes: Sequence[float]) -> np.ndarray:
+    """[s, c] DRAM transactions at each capacity — the batched form of
+    ``TrafficStats.dram_tx`` (paper Fig. 6's capacity sweep)."""
+    batch = pack(stats_seq)
+    caps = np.array([float(c) for c in capacities_bytes], dtype=np.float64)
+    with enable_x64():
+        out = _miss_tx_kernel(batch.bytes_total, batch.reuse_distance,
+                              batch.dram_visible & batch.mask, caps)
+    return np.asarray(out)
+
+
+def clear_caches() -> None:
+    """Drop memoized stats and tables (benchmark reruns)."""
+    stats_for.cache_clear()
+    _evaluate_cached.cache_clear()

@@ -6,9 +6,9 @@ pytest.importorskip("hypothesis")
 import hypothesis.strategies as st  # noqa: E402
 from hypothesis import given, settings  # noqa: E402
 
-from repro.core.cachesim import (SetAssocCache, misses_at_capacity,
-                                 stack_distance_profile)
-from repro.core.traffic import INF, AccessStream, TrafficStats
+from repro.core.cachesim import (SetAssocCache, misses_at_capacity,  # noqa: E402
+                                 stack_distance_profile, trace_from_streams)
+from repro.core.traffic import INF, AccessStream, TrafficStats  # noqa: E402
 
 traces = st.lists(st.integers(0, 40), min_size=1, max_size=300)
 
@@ -68,6 +68,31 @@ def test_dram_traffic_monotone_in_capacity(spec):
     assert tx[-1] >= 0.0
     # DRAM traffic never exceeds total L2 traffic
     assert tx[0] <= stats.l2_read_tx + stats.l2_write_tx + 1e-6
+
+
+lowerable = st.lists(
+    st.tuples(st.floats(4096.0, 4096.0 * 48), st.booleans(),
+              st.one_of(st.just(INF), st.floats(4096.0, 4096.0 * 128))),
+    min_size=1, max_size=8)
+
+
+@given(lowerable)
+@settings(max_examples=30, deadline=None)
+def test_lowered_trace_miss_curve_monotone(spec):
+    """misses_at_capacity is non-increasing in capacity on lowered traces,
+    and finite reuse distances produce non-cold hits at large capacity."""
+    strs = [AccessStream(f"s{i}", b, w, rd)
+            for i, (b, w, rd) in enumerate(spec)]
+    trace = trace_from_streams(strs, block_bytes=4096)
+    dist = stack_distance_profile([b for b, _ in trace])
+    misses = [misses_at_capacity(dist, c)
+              for c in (1, 2, 4, 8, 16, 64, 1 << 20)]
+    assert all(a >= b for a, b in zip(misses, misses[1:]))
+    # at huge capacity only cold misses remain; re-touches all hit
+    unique = len({b for b, _ in trace})
+    assert misses[-1] == unique
+    if any(rd != INF for _, _, rd in spec):
+        assert misses[-1] < len(trace)
 
 
 @given(streams)

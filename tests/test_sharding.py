@@ -7,9 +7,9 @@ import pytest
 
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
-from jax.sharding import PartitionSpec as P
+from jax.sharding import PartitionSpec as P  # noqa: E402
 
-from repro.distributed import sharding
+from repro.distributed import sharding  # noqa: E402
 
 
 @dataclasses.dataclass(frozen=True)

@@ -10,12 +10,13 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.checkpoint import CheckpointManager
-from repro.data import DataConfig, SyntheticTokens
-from repro.distributed.compression import (EFCompressor, dequantize_int8,
+from repro.checkpoint import CheckpointManager  # noqa: E402
+from repro.data import DataConfig, SyntheticTokens  # noqa: E402
+from repro.distributed.compression import (EFCompressor,  # noqa: E402
+                                           dequantize_int8,
                                            quantize_int8, topk_sparsify)
-from repro.distributed.fault import RestartPolicy, StragglerDetector
-from repro.optim.schedules import cosine, wsd
+from repro.distributed.fault import RestartPolicy, StragglerDetector  # noqa: E402
+from repro.optim.schedules import cosine, wsd  # noqa: E402
 
 
 class TestCheckpoint:

@@ -1,0 +1,141 @@
+"""Parity tests: the batched workload engine vs the scalar traffic path.
+
+The workload engine re-expresses the architecture-layer fold
+(``traffic.runtime`` / ``traffic.energy`` / ``TrafficStats.dram_tx``) as
+one jitted [scenario] x [design] computation; these tests pin the two
+implementations together across every paper workload x {inference,
+training} x memory technology x scaling capacity, plus the batched DRAM
+miss-curve, the normalized-metric helpers the analyses consume, and the
+padding/memoization behavior of the pack.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import engine, isocap, traffic, workload_engine
+from repro.core.isocap import INFER_BATCH, TRAIN_BATCH, MEMS
+from repro.core.scaling import CAPACITIES_MB
+from repro.core.workloads import paper_workloads
+
+REL = 1e-12  # float64 agreement between the scalar and batched paths
+REPORT_FIELDS = ("runtime_s", "dyn_read_j", "dyn_write_j", "leak_j", "dram_j")
+
+STAGES = ((False, INFER_BATCH), (True, TRAIN_BATCH))
+
+
+@pytest.fixture(scope="module")
+def stats_list():
+    """All paper workloads x {inference, training} scenarios."""
+    return [workload_engine.stats_for(w, batch, training)
+            for w in paper_workloads().values()
+            for training, batch in STAGES]
+
+
+@pytest.fixture(scope="module")
+def designs():
+    """EDAP-tuned designs for all MEMS at all scaling capacities."""
+    caps = tuple(int(c * 2**20) for c in CAPACITIES_MB)
+    table = engine.design_table(tuple(MEMS), caps)
+    return tuple(table.tuned(m, c) for c in caps for m in MEMS)
+
+
+@pytest.fixture(scope="module")
+def table(stats_list, designs):
+    return workload_engine.evaluate(stats_list, designs)
+
+
+def test_reports_match_scalar_energy(stats_list, designs, table):
+    """Every [scenario, design] cell equals the scalar traffic.energy."""
+    for i, stats in enumerate(stats_list):
+        for j, design in enumerate(designs):
+            ref = traffic.energy(stats, design)
+            rep = table.report(i, j)
+            for f in REPORT_FIELDS:
+                assert getattr(rep, f) == pytest.approx(
+                    getattr(ref, f), rel=REL), \
+                    f"{table.scenarios[i]}/{design.mem}@{design.capacity_mb}MB: {f}"
+            for include_dram in (False, True):
+                assert float(table.total_j(include_dram)[i, j]) == \
+                    pytest.approx(ref.total_j(include_dram), rel=REL)
+                assert float(table.edp(include_dram)[i, j]) == \
+                    pytest.approx(ref.edp(include_dram), rel=REL)
+
+
+def test_runtime_matches_scalar_runtime(stats_list, designs, table):
+    """Both include_dram runtime variants equal traffic.runtime."""
+    for i, stats in enumerate(stats_list):
+        for j, design in enumerate(designs):
+            assert float(table.runtime_s[i, j]) == pytest.approx(
+                traffic.runtime(stats, design, include_dram=True), rel=REL)
+            assert float(table.runtime_nodram_s[i, j]) == pytest.approx(
+                traffic.runtime(stats, design, include_dram=False), rel=REL)
+
+
+def test_l2_transactions_match_scalar(stats_list, table):
+    for i, stats in enumerate(stats_list):
+        assert float(table.l2_read_tx[i]) == pytest.approx(
+            stats.l2_read_tx, rel=REL)
+        assert float(table.l2_write_tx[i]) == pytest.approx(
+            stats.l2_write_tx, rel=REL)
+        assert float(table.read_write_ratio[i]) == pytest.approx(
+            stats.read_write_ratio, rel=REL)
+
+
+def test_dram_tx_curve_matches_scalar(stats_list):
+    """Batched miss-curve (Fig. 6 sweep) == per-capacity scalar dram_tx."""
+    caps = [int(c * 2**20) for c in (1, 3, 6, 7, 10, 32)]
+    tx = workload_engine.dram_tx(stats_list, caps)
+    for i, stats in enumerate(stats_list):
+        for k, cap in enumerate(caps):
+            assert float(tx[i, k]) == pytest.approx(stats.dram_tx(cap),
+                                                    rel=REL)
+
+
+def test_norm_matches_isocap_rows(stats_list):
+    """WorkloadTable.norm equals the scalar IsoCapRow.norm convention."""
+    designs3 = tuple(isocap.designs_at(3).values())
+    table = workload_engine.evaluate(stats_list, designs3)
+    rows = isocap.analyze()
+    assert len(rows) == len(stats_list)
+    for i, row in enumerate(rows):
+        assert table.scenarios[i] == (row.workload, row.batch, row.training)
+        for mem in ("stt", "sot"):
+            for metric in ("dyn", "leak", "energy", "runtime"):
+                assert float(table.norm(metric, mem)[i]) == pytest.approx(
+                    row.norm(metric, mem), rel=REL)
+            assert float(table.norm("edp", mem, include_dram=True)[i]) == \
+                pytest.approx(row.norm("edp", mem, True), rel=REL)
+
+
+def test_padding_invariance(stats_list, designs, table):
+    """A scenario evaluated alone (different pad width) matches the full
+    cross product — padding contributes nothing to any fold."""
+    sub = workload_engine.evaluate(stats_list[:1], designs[:3])
+    for j in range(3):
+        for f in REPORT_FIELDS:
+            assert getattr(sub.report(0, j), f) == pytest.approx(
+                getattr(table.report(0, j), f), rel=REL)
+
+
+def test_evaluate_memoized(stats_list, designs, table):
+    assert workload_engine.evaluate(stats_list, designs) is table
+
+
+def test_index_errors(table):
+    with pytest.raises(ValueError):
+        table.design_index("sram", 999)
+    with pytest.raises(ValueError):
+        table.design_index("sram")  # several capacities: ambiguous
+    with pytest.raises(ValueError):
+        table.scenario_index("no-such-workload", 1, False)
+    with pytest.raises(ValueError):
+        table.reports(0)  # 18 designs are not memory-unique
+
+
+def test_stream_batch_mask_counts(stats_list):
+    batch = workload_engine.pack(stats_list)
+    for i, stats in enumerate(stats_list):
+        assert int(batch.mask[i].sum()) == len(stats.streams)
+        # padding rows carry zero bytes and infinite reuse distance
+        assert not batch.bytes_total[i, ~batch.mask[i]].any()
+        assert np.isinf(batch.reuse_distance[i, ~batch.mask[i]]).all()
