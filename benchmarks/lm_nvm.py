@@ -1,77 +1,75 @@
-"""Beyond-paper: DeepNVM++ applied to the 10 assigned LM architectures on
-the TPU-v5e-class target (DESIGN.md SS2 hardware adaptation).
+"""Beyond-paper: DeepNVM++ applied to the 10 assigned LM architectures
+(DESIGN.md SS2 hardware adaptation).
 
 Workload memory statistics come from the framework's own analytic traffic
-model (launch/flops.py byte accounting at 128 B transactions), and the
+model (repro.scenarios, launch/flops.py byte accounting), and the
 question becomes the paper's, one platform over: *should the TPU-class
 last-level on-chip buffer (VMEM-capacity regime, 16-64 MB) be SRAM or
 MRAM for LM training/serving?*
+
+The whole study is one declarative sweep (core/sweep.py): every supported
+(arch x shape) cell — train_4k, decode_32k, and long_500k for the
+sub-quadratic archs — folded through the EDAP-tuned {sram, stt, sot}
+designs at 48 MB on both the TPU-v5e target and the paper's GTX 1080 Ti,
+as a single batched [platform] x [arch-shape] x [memory] evaluation.  No
+scalar per-cell traffic.energy calls remain.
 """
 
 from __future__ import annotations
 
-from repro.core import traffic, tuner
-from repro.core.tech import TPU_V5E
-from repro.core.traffic import AccessStream, TrafficStats, INF
-import repro.configs as configs
-from repro.configs.base import SHAPES
-from repro.launch import flops as flops_mod
+from repro import scenarios
+from repro.core import sweep
+from repro.core.tech import GTX_1080TI, TPU_V5E
 
-LINE = 128
+PLATFORMS = (TPU_V5E, GTX_1080TI)
+QUICK_ARCHS = ("tinyllama-1.1b", "rwkv6-3b", "hymba-1.5b")
 
 
-def lm_traffic(arch: str, shape_name: str) -> TrafficStats:
-    """AccessStreams of one step of an (arch x shape) cell, from the same
-    analytic model the roofline uses."""
-    cfg = configs.get(arch)
-    shape = SHAPES[shape_name]
-    acct = flops_mod.account(cfg, shape)
-    tokens = shape.global_batch * (1 if shape.is_decode else shape.seq_len)
-    d = cfg.d_model
-    streams = [
-        AccessStream("weights", acct.param_bytes, False, INF),
-        AccessStream("activations.r",
-                     12.0 * tokens * d * 2.0, False, 4 * tokens * d // 64),
-        AccessStream("activations.w",
-                     6.0 * tokens * d * 2.0, True, 4 * tokens * d // 64),
-        AccessStream("kv.r", acct.kv_read_bytes, False, INF),
-        AccessStream("kv.w", acct.kv_write_bytes, True, INF),
-        AccessStream("logits", tokens * cfg.vocab * 4.0, True, INF),
-    ]
-    if shape.kind == "train":
-        streams += [
-            AccessStream("grads.w", acct.param_bytes, True, INF),
-            AccessStream("opt.r", 3.0 * acct.param_bytes, False, INF),
-            AccessStream("opt.w", 2.0 * acct.param_bytes, True, INF),
-        ]
-    return TrafficStats(f"{arch}/{shape_name}", shape.global_batch,
-                        shape.kind == "train", tuple(streams),
-                        macs_per_batch=acct.flops / 2.0)
+def spec(quick: bool = False) -> sweep.SweepSpec:
+    return scenarios.lm_sweep_spec(
+        platforms=PLATFORMS,
+        archs=QUICK_ARCHS if quick else None,
+        name="lm-nvm-quick" if quick else "lm-nvm")
 
 
-def run() -> dict:
-    designs = {m: tuner.tuned_design(m, 48) for m in ("sram", "stt", "sot")}
+def platform_rows(res: sweep.SweepResult, platform_index: int) -> list[dict]:
+    """The study's row shape for one platform of a sweep result (shared
+    with benchmarks/bench_sweep.py's batched-vs-scalar parity check)."""
+    energy = res.metric("energy", include_dram=False)[platform_index]
+    edp = res.metric("edp", include_dram=True)[platform_index]
+    rw = res.read_write_ratio                           # [s]
+    j = {m: res.design_index(m) for m in ("sram", "stt", "sot")}
+    pname = res.platform_labels[platform_index]
     rows = []
-    for arch in configs.all_archs():
-        for shape_name in ("train_4k", "decode_32k"):
-            cfg = configs.get(arch)
-            if shape_name == "long_500k" and not cfg.sub_quadratic:
-                continue
-            stats = lm_traffic(arch, shape_name)
-            reps = {m: traffic.energy(stats, d, TPU_V5E)
-                    for m, d in designs.items()}
-            rows.append(dict(
-                arch=arch, shape=shape_name,
-                rw_ratio=stats.read_write_ratio,
-                stt_energy_red=reps["sram"].total_j(False)
-                / reps["stt"].total_j(False),
-                sot_energy_red=reps["sram"].total_j(False)
-                / reps["sot"].total_j(False),
-                stt_edp_red=reps["sram"].edp(True) / reps["stt"].edp(True),
-                sot_edp_red=reps["sram"].edp(True) / reps["sot"].edp(True),
-            ))
-    mean_sot = sum(r["sot_edp_red"] for r in rows) / len(rows)
-    mean_stt = sum(r["stt_edp_red"] for r in rows) / len(rows)
+    for si, (cell, _, _) in enumerate(res.scenario_labels):
+        arch, shape = cell.split("/", 1)
+        rows.append(dict(
+            arch=arch, shape=shape, platform=pname,
+            rw_ratio=float(rw[si]),
+            stt_energy_red=float(energy[si, j["sram"]]
+                                 / energy[si, j["stt"]]),
+            sot_energy_red=float(energy[si, j["sram"]]
+                                 / energy[si, j["sot"]]),
+            stt_edp_red=float(edp[si, j["sram"]] / edp[si, j["stt"]]),
+            sot_edp_red=float(edp[si, j["sram"]] / edp[si, j["sot"]]),
+        ))
+    return rows
+
+
+def run(quick: bool = False) -> dict:
+    res = sweep.run(spec(quick))
+    rows = [r for pi in range(len(res.platform_labels))
+            for r in platform_rows(res, pi)]
+    tpu = [r for r in rows if r["platform"] == TPU_V5E.name]
+    mean_stt = sum(r["stt_edp_red"] for r in tpu) / len(tpu)
+    mean_sot = sum(r["sot_edp_red"] for r in tpu) / len(tpu)
+    n_long = sum(r["shape"] == "long_500k" for r in tpu)
     return {"rows": rows,
             "derived": (f"lm_mean_edp_red_stt={mean_stt:.2f},"
-                        f"sot={mean_sot:.2f} @48MB TPU-class buffer")}
+                        f"sot={mean_sot:.2f} @48MB TPU-class buffer,"
+                        f"{len(tpu)}cells({n_long}xlong_500k),"
+                        f"{len(res.platform_labels)}platforms")}
+
+
+if __name__ == "__main__":
+    print(run()["derived"])

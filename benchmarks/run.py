@@ -3,11 +3,19 @@
 Prints ``name,us_per_call,derived`` CSV (derived = the reproduced headline
 quantities vs the paper's values) and writes detailed per-row CSVs to
 runs/benchmarks/.
+
+``--only MODULE`` (repeatable, comma-separated) restricts the run — the
+CI benchmark-smoke job runs ``--only fig3_4_isocap,lm_nvm --quick`` so
+analysis-layer regressions fail fast.  ``--quick`` is forwarded to
+modules whose ``run`` accepts a ``quick`` keyword (reduced reps / arch
+sets); the rest run unchanged.
 """
 
 from __future__ import annotations
 
+import argparse
 import importlib
+import inspect
 import time
 
 from repro.core.report import write_csv
@@ -23,15 +31,37 @@ MODULES = (
     "lm_nvm",
     "bench_engine",
     "bench_workload_engine",
+    "bench_sweep",
 )
 
 
-def main() -> None:
+def select(only: list[str] | None) -> tuple[str, ...]:
+    if not only:
+        return MODULES
+    wanted = [n for arg in only for n in arg.split(",") if n]
+    unknown = sorted(set(wanted) - set(MODULES))
+    if unknown:
+        raise SystemExit(f"unknown benchmark module(s): {', '.join(unknown)}"
+                         f" (choose from: {', '.join(MODULES)})")
+    return tuple(n for n in MODULES if n in wanted)
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--only", action="append", metavar="MODULE",
+                    help="run only this module (repeatable, comma-separated)")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced work where a module supports it")
+    args = ap.parse_args(argv)
+    names = select(args.only)
+
     print("name,us_per_call,derived")
-    for name in MODULES:
+    for name in names:
         mod = importlib.import_module(f"benchmarks.{name}")
+        kwargs = {"quick": True} if args.quick and \
+            "quick" in inspect.signature(mod.run).parameters else {}
         t0 = time.perf_counter()
-        result = mod.run()
+        result = mod.run(**kwargs)
         dt_us = (time.perf_counter() - t0) * 1e6
         derived = result.get("derived", "")
         print(f'{name},{dt_us:.0f},"{derived}"')

@@ -1,39 +1,35 @@
 """Design-space exploration with DeepNVM++ (the paper's framework claim):
-sweep technology x capacity x workload and emit the EDP landscape.
+sweep technology x capacity x workload x platform and emit the EDP
+landscape.
 
-The whole pipeline is two composed batched computations: the circuit
-engine evaluates every (tech x capacity x organization) design point in
-one jitted call, and the workload engine folds every workload through
-every tuned (tech, capacity) design in a second one.
+The whole pipeline is one declarative SweepSpec: it lowers to a single
+circuit-engine evaluation of every (tech x capacity x organization)
+design point plus a single workload-engine fold of every workload through
+every tuned design on every platform.
 
     PYTHONPATH=src python examples/nvm_dse.py
 """
-from repro.core import engine, workload_engine
+from repro.core import sweep
 from repro.core.report import markdown_table
+from repro.core.tech import GTX_1080TI, TPU_V5E
 from repro.core.workloads import paper_workloads
 
 CAPS_MB = (2, 3, 6, 12, 24)
-MEMS = ("sram", "stt", "sot")
 
-# the whole (tech x capacity x organization) space, one batched evaluation
-table = engine.design_table(MEMS, tuple(c * 2**20 for c in CAPS_MB))
-designs = tuple(table.tuned(m, cap * 2**20) for cap in CAPS_MB for m in MEMS)
+spec = sweep.SweepSpec(
+    name="nvm-dse",
+    scenarios=sweep.workload_scenarios(paper_workloads(), ((False, 4),)),
+    designs=sweep.design_grid(sweep.MEMS, CAPS_MB),
+    platforms=(GTX_1080TI, TPU_V5E),
+)
+res = sweep.run(spec)
 
-# every (workload x design) EDP, one batched workload-engine evaluation
-stats = [workload_engine.stats_for(w, 4, False)
-         for w in paper_workloads().values()]
-wt = workload_engine.evaluate(stats, designs)
-edp = wt.edp(include_dram=True)  # [workload, design]
-
-rows = []
-for ci, cap in enumerate(CAPS_MB):
-    base = ci * len(MEMS)  # sram column of this capacity
-    for si, (wname, _, _) in enumerate(wt.scenarios):
-        for mi, m in enumerate(MEMS[1:], start=1):
-            rows.append(dict(capacity_mb=cap, workload=wname, mem=m,
-                             edp_reduction=round(
-                                 float(edp[si, base] / edp[si, base + mi]),
-                                 2)))
+# normalized EDP per (platform, workload, design), baseline = SRAM of the
+# same capacity group; keep the non-baseline rows of the tidy view
+rows = [dict(platform=r["platform"], capacity_mb=r["capacity_mb"],
+             workload=r["workload"], mem=r["mem"],
+             edp_reduction=round(1.0 / r["edp_x"], 2))
+        for r in res.rows(include_dram=True) if r["mem"] != "sram"]
 print(markdown_table(rows))
 best = max(rows, key=lambda r: r["edp_reduction"])
 print("\nbest design point:", best)

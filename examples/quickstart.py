@@ -28,16 +28,15 @@ for m, d in designs.items():
     print(f"{m}: E {rep.total_j(False)*1e3:.1f} mJ, EDP "
           f"{rep.edp(True)*1e6:.2f} mJ*ms")
 
-# 4. the same question for an assigned LM architecture on TPU-class HW
-import os  # noqa: E402  (repo root onto sys.path for benchmarks.lm_nvm)
-import sys  # noqa: E402
-sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-from benchmarks.lm_nvm import lm_traffic  # noqa: E402
+# 4. the same question for an assigned LM architecture on TPU-class HW,
+#    as one declarative sweep (scenario registry + unified pipeline)
+from repro import scenarios  # noqa: E402
+from repro.core import sweep  # noqa: E402
 from repro.core.tech import TPU_V5E  # noqa: E402
-designs48 = {m: tuner.tuned_design(m, 48) for m in ("sram", "stt", "sot")}
-lm_stats = lm_traffic("tinyllama-1.1b", "decode_32k")
-base = traffic.energy(lm_stats, designs48["sram"], TPU_V5E)
+res = sweep.run(scenarios.lm_sweep_spec(
+    archs=("tinyllama-1.1b",), shapes=("decode_32k",),
+    platforms=(TPU_V5E,)))
+edp_x = res.norm_to().metric("edp", include_dram=True)
 for m in ("stt", "sot"):
-    rep = traffic.energy(lm_stats, designs48[m], TPU_V5E)
     print(f"tinyllama decode_32k, {m} 48MB buffer: "
-          f"EDP reduction {base.edp(True)/rep.edp(True):.1f}x")
+          f"EDP reduction {1 / edp_x[0, 0, res.design_index(m)]:.1f}x")

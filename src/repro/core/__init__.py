@@ -7,6 +7,7 @@ Layers (paper Fig. 2):
     workloads / traffic DL workload memory statistics          (SIII-C)
     workload_engine    ... the workload fold as one batched computation
     cachesim           trace/analytic DRAM model               (SIII-D)
+    sweep              one declarative SweepSpec driving both engines
     isocap / isoarea / scaling   architecture-level analyses   (Figs 3-10)
 """
 
@@ -21,6 +22,7 @@ from repro.core import (  # noqa: F401
     mtj,
     report,
     scaling,
+    sweep,
     tech,
     traffic,
     tuner,

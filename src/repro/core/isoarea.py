@@ -6,9 +6,10 @@ model).  The larger capacity reduces DRAM traffic (Fig. 6 — GPGPU-Sim in
 the paper, the reuse-distance model here), which is where iso-area MRAM
 wins: slower, bigger caches, but far fewer costly off-chip accesses.
 
-Figs. 6-8 are read from batched workload-engine folds: the DRAM curve is
-one [workload] x [capacity] miss-curve evaluation and the energy/EDP rows
-one [workload-stage] x [memory] evaluation against the iso-area designs.
+Both Fig. 6 and Figs. 7/8 are thin SweepSpec adapters (core/sweep.py):
+the DRAM curve reads the platform-independent [scenario] x [capacity]
+DRAM-transaction tensor of a capacity-axis sweep, and the energy/EDP rows
+come from a sweep over the iso-area design corners.
 """
 
 from __future__ import annotations
@@ -16,9 +17,9 @@ from __future__ import annotations
 import dataclasses
 from collections.abc import Sequence
 
-from repro.core import engine, tuner, workload_engine
-from repro.core.isocap import (IsoCapRow, INFER_BATCH, TRAIN_BATCH,
-                               _stage_rows)
+from repro.core import sweep, tuner
+from repro.core.isocap import (INFER_BATCH, TRAIN_BATCH, IsoCapRow,
+                               rows_from_result)
 from repro.core.tech import Platform, GTX_1080TI
 from repro.core.workloads import Workload, paper_workloads, alexnet
 
@@ -35,19 +36,25 @@ class IsoAreaDesigns:
         return {"sram": self.sram, "stt": self.stt, "sot": self.sot}
 
 
+def corners(sram_capacity_mb: float = 3.0) -> tuple[sweep.DesignPoint, ...]:
+    """The iso-area design corners the area budget selects: SRAM at its
+    own capacity, each MRAM flavor at the largest capacity fitting the
+    SRAM area (one normalization group — the SRAM baseline)."""
+    return sweep.design_corners(
+        (("sram", sram_capacity_mb),
+         ("stt", tuner.iso_area_capacity("stt", sram_capacity_mb)),
+         ("sot", tuner.iso_area_capacity("sot", sram_capacity_mb))))
+
+
 def designs(sram_capacity_mb: float = 3.0) -> IsoAreaDesigns:
     """Iso-area design set, read from one shared batched sweep over the
     three (technology, capacity) corners the area budget selects."""
-    stt_mb = tuner.iso_area_capacity("stt", sram_capacity_mb)
-    sot_mb = tuner.iso_area_capacity("sot", sram_capacity_mb)
-    caps = (int(sram_capacity_mb * 2**20), stt_mb * 2**20, sot_mb * 2**20)
-    table = engine.design_table(("sram", "stt", "sot"), caps)
+    points = corners(sram_capacity_mb)
+    _, (sram_d, stt_d, sot_d) = sweep.lower_designs(points)
     return IsoAreaDesigns(
-        sram=table.tuned("sram", caps[0]),
-        stt=table.tuned("stt", caps[1]),
-        sot=table.tuned("sot", caps[2]),
-        stt_capacity_mb=stt_mb,
-        sot_capacity_mb=sot_mb,
+        sram=sram_d, stt=stt_d, sot=sot_d,
+        stt_capacity_mb=int(points[1].capacity_mb),
+        sot_capacity_mb=int(points[2].capacity_mb),
     )
 
 
@@ -56,11 +63,17 @@ def dram_reduction_curve(workload: Workload | None = None, batch: int = INFER_BA
                          capacities_mb: Sequence[float] = (3, 6, 7, 10, 12, 24),
                          ) -> dict[float, float]:
     """Fig. 6: % reduction in DRAM accesses vs the 3 MB baseline as the
-    last-level cache grows (paper: AlexNet via GPGPU-Sim/DarkNet)."""
+    last-level cache grows (paper: AlexNet via GPGPU-Sim/DarkNet).  The
+    capacity axis is the design axis of a sweep; the curve reads its
+    platform-independent DRAM-transaction tensor."""
     w = workload if workload is not None else alexnet()
-    stats = workload_engine.stats_for(w, batch, training)
     caps = (3,) + tuple(capacities_mb)
-    tx = workload_engine.dram_tx([stats], [c * 2**20 for c in caps])[0]
+    spec = sweep.SweepSpec(
+        name="isoarea-dram",
+        scenarios=sweep.workload_scenarios((w,), ((training, batch),)),
+        designs=tuple(sweep.DesignPoint("sram", int(c * 2**20), group=i)
+                      for i, c in enumerate(caps)))
+    tx = sweep.run(spec).dram_tx[0]
     return {c: 100.0 * (1.0 - float(tx[1 + i] / tx[0]))
             for i, c in enumerate(capacities_mb)}
 
@@ -70,10 +83,15 @@ def analyze(workloads: dict[str, Workload] | None = None,
             infer_batch: int = INFER_BATCH,
             train_batch: int = TRAIN_BATCH) -> list[IsoCapRow]:
     """Figs. 7/8: energy and EDP at iso-area (with/without DRAM terms) —
-    one batched [workload-stage] x [memory] fold at the iso-area corners."""
+    one declarative sweep at the iso-area corners."""
     workloads = workloads if workloads is not None else paper_workloads()
-    return _stage_rows(workloads, designs().as_dict(), platform,
-                       infer_batch, train_batch)
+    spec = sweep.SweepSpec(
+        name="isoarea",
+        scenarios=sweep.workload_scenarios(
+            workloads, ((False, infer_batch), (True, train_batch))),
+        designs=corners(),
+        platforms=(platform,))
+    return rows_from_result(sweep.run(spec))
 
 
 def summary(rows: list[IsoCapRow]) -> dict[str, dict[str, float]]:

@@ -5,9 +5,10 @@ statistics from the traffic model; outputs normalized dynamic/leakage
 energy breakdowns, total energy, and EDP per workload for inference
 (batch 4) and training (batch 64), plus the batch-size sweep of Fig. 5.
 
-All rows are read from one batched [workload-stage] x [memory] evaluation
-on the workload engine (core/workload_engine.py) — no per-(workload,
-memory) scalar traffic.energy calls.
+Both analyses are thin adapters over the unified sweep pipeline
+(core/sweep.py): they declare a SweepSpec (scenarios x designs x
+platform) and materialize IsoCapRows from the one batched evaluation it
+lowers to — no per-analysis designs/fold plumbing.
 """
 
 from __future__ import annotations
@@ -15,12 +16,12 @@ from __future__ import annotations
 import dataclasses
 from collections.abc import Sequence
 
-from repro.core import engine, workload_engine
+from repro.core import sweep
+from repro.core.sweep import MEMS  # noqa: F401  (re-export: analyses' axis)
 from repro.core.tech import Platform, GTX_1080TI
 from repro.core.traffic import EnergyReport
 from repro.core.workloads import Workload, paper_workloads
 
-MEMS = ("sram", "stt", "sot")
 INFER_BATCH = 4
 TRAIN_BATCH = 64
 CAPACITY_MB = 3
@@ -29,9 +30,8 @@ CAPACITY_MB = 3
 def designs_at(capacity_mb: float) -> dict[str, object]:
     """EDAP-tuned designs for all technologies at one capacity, read from
     the shared memoized batched sweep (one engine evaluation)."""
-    cap_bytes = int(capacity_mb * 2**20)
-    table = engine.design_table(tuple(MEMS), (cap_bytes,))
-    return {m: table.tuned(m, cap_bytes) for m in MEMS}
+    _, designs = sweep.lower_designs(sweep.design_grid(MEMS, (capacity_mb,)))
+    return dict(zip(MEMS, designs))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,25 +56,15 @@ class IsoCapRow:
         return get(self.reports[mem]) / get(self.reports["sram"])
 
 
-def _rows_from_table(table: workload_engine.WorkloadTable) -> list[IsoCapRow]:
-    """Materialize one IsoCapRow per scenario from a batched fold."""
+def rows_from_result(result: sweep.SweepResult,
+                     platform_index: int = 0) -> list[IsoCapRow]:
+    """Materialize one IsoCapRow per scenario from a sweep result (used by
+    every memory-unique-design analysis: isocap, isoarea, Fig. 5)."""
+    table = result.tables[platform_index]
     ratios = table.read_write_ratio
     return [IsoCapRow(workload, training, batch, table.reports(i),
                       float(ratios[i]))
             for i, (workload, batch, training) in enumerate(table.scenarios)]
-
-
-def _stage_rows(workloads: dict[str, Workload], designs: dict,
-                platform: Platform, infer_batch: int,
-                train_batch: int) -> list[IsoCapRow]:
-    """One batched [workload-stage] x [memory] fold, as IsoCapRows —
-    shared by the iso-capacity and iso-area analyses."""
-    stats = [workload_engine.stats_for(w, batch, training)
-             for w in workloads.values()
-             for training, batch in ((False, infer_batch),
-                                     (True, train_batch))]
-    table = workload_engine.evaluate(stats, tuple(designs.values()), platform)
-    return _rows_from_table(table)
 
 
 def analyze(workloads: dict[str, Workload] | None = None,
@@ -83,10 +73,15 @@ def analyze(workloads: dict[str, Workload] | None = None,
             infer_batch: int = INFER_BATCH,
             train_batch: int = TRAIN_BATCH) -> list[IsoCapRow]:
     """Figs. 3/4: per workload x {inference, training} x memory — one
-    batched [workload-stage] x [memory] evaluation."""
+    declarative sweep over the iso-capacity design grid."""
     workloads = workloads if workloads is not None else paper_workloads()
-    return _stage_rows(workloads, designs_at(capacity_mb), platform,
-                       infer_batch, train_batch)
+    spec = sweep.SweepSpec(
+        name="isocap",
+        scenarios=sweep.workload_scenarios(
+            workloads, ((False, infer_batch), (True, train_batch))),
+        designs=sweep.design_grid(MEMS, (capacity_mb,)),
+        platforms=(platform,))
+    return rows_from_result(sweep.run(spec))
 
 
 def batch_sweep(workload: Workload, training: bool,
@@ -94,12 +89,14 @@ def batch_sweep(workload: Workload, training: bool,
                 capacity_mb: float = CAPACITY_MB,
                 platform: Platform = GTX_1080TI) -> list[IsoCapRow]:
     """Fig. 5: EDP vs batch size (paper: AlexNet, 3 MB iso-capacity) — the
-    batch axis is one scenario dimension of the batched fold."""
-    designs = designs_at(capacity_mb)
-    stats = [workload_engine.stats_for(workload, batch, training)
-             for batch in batches]
-    table = workload_engine.evaluate(stats, tuple(designs.values()), platform)
-    return _rows_from_table(table)
+    batch axis is the scenario dimension of the sweep."""
+    spec = sweep.SweepSpec(
+        name="isocap-batch",
+        scenarios=sweep.workload_scenarios(
+            (workload,), tuple((training, b) for b in batches)),
+        designs=sweep.design_grid(MEMS, (capacity_mb,)),
+        platforms=(platform,))
+    return rows_from_result(sweep.run(spec))
 
 
 def summary(rows: list[IsoCapRow]) -> dict[str, dict[str, float]]:

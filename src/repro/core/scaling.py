@@ -6,12 +6,12 @@ normalized energy / latency / EDP vs SRAM across all workloads — the
 paper's projection for the GPU L2 growth trend of Fig. 1 (and, in our
 hardware adaptation, for TPU-class on-chip buffer capacities).
 
-The whole (technology x capacity x organization) sweep is evaluated once
-on the batched circuit engine as a shared memoized design table; ppa_sweep
-and workload_sweep both read tuned designs from it.  workload_sweep then
-folds every (workload, stage) scenario through every tuned (memory,
-capacity) design in one batched workload-engine evaluation — the pipeline
-is two composed batched computations, no scalar per-combination calls.
+Both sweeps are thin adapters over the unified sweep pipeline
+(core/sweep.py): ppa_sweep reads tuned designs from the shared memoized
+design table the spec lowers to, and workload_sweep declares a SweepSpec
+whose design axis is the full (capacity x memory) grid — one circuit
+evaluation plus one batched workload fold, no scalar per-combination
+calls and no per-analysis fold plumbing.
 """
 
 from __future__ import annotations
@@ -20,7 +20,7 @@ import dataclasses
 import statistics
 from collections.abc import Sequence
 
-from repro.core import engine, workload_engine
+from repro.core import engine, sweep
 from repro.core.isocap import INFER_BATCH, TRAIN_BATCH, MEMS
 from repro.core.tech import Platform, GTX_1080TI
 from repro.core.workloads import Workload, paper_workloads
@@ -30,8 +30,7 @@ CAPACITIES_MB = (1, 2, 4, 8, 16, 32)  # paper Algorithm 1's capacity set
 
 def tuned_table(capacities_mb: Sequence[float]) -> engine.DesignTable:
     """The shared batched sweep for all technologies at these capacities."""
-    return engine.design_table(
-        tuple(MEMS), tuple(int(c * 2**20) for c in capacities_mb))
+    return sweep.lower_designs(sweep.design_grid(MEMS, capacities_mb))[0]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,17 +82,18 @@ def ppa_sweep(capacities_mb: Sequence[float] = CAPACITIES_MB) -> list[PPARow]:
 def workload_sweep(capacities_mb: Sequence[float] = CAPACITIES_MB,
                    workloads: dict[str, Workload] | None = None,
                    platform: Platform = GTX_1080TI) -> list[ScalingRow]:
-    """One batched [workload x stage] x [memory x capacity] fold on the
-    workload engine, then per-(capacity, stage, memory) reductions over the
+    """One declarative sweep over the [workload x stage] x [memory x
+    capacity] grid, then per-(capacity, stage, memory) reductions over the
     result tensors."""
     workloads = workloads if workloads is not None else paper_workloads()
-    table = tuned_table(capacities_mb)
     stages = ((False, INFER_BATCH), (True, TRAIN_BATCH))
-    stats = [workload_engine.stats_for(w, batch, training)
-             for training, batch in stages for w in workloads.values()]
-    designs = tuple(table.tuned(m, int(cap * 2**20))
-                    for cap in capacities_mb for m in MEMS)
-    wt = workload_engine.evaluate(stats, designs, platform)
+    spec = sweep.SweepSpec(
+        name="scaling",
+        scenarios=sweep.workload_scenarios(workloads, stages,
+                                           stage_major=True),
+        designs=sweep.design_grid(MEMS, capacities_mb),
+        platforms=(platform,))
+    wt = sweep.run(spec).tables[0]
 
     energy = wt.total_j(False)   # [s, d]
     latency = wt.runtime_s

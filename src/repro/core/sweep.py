@@ -1,0 +1,338 @@
+"""Unified cross-layer sweep pipeline — one declarative spec for every
+analysis.
+
+DeepNVM++'s value is that a single circuit + architecture stack answers
+every question — iso-capacity (Figs. 3-5), iso-area (Figs. 6-8),
+scalability (Figs. 9-10), and the beyond-paper LM study — from the same
+models.  This module makes that literal: a :class:`SweepSpec` declares the
+axes of an analysis
+
+    scenarios  (workload, batch, training) TrafficStats — paper CNNs,
+               batch sweeps, or LM (arch x shape) cells (repro.scenarios)
+    designs    (memory technology, capacity) points, with a normalization
+               group per point (the paper's "normalize to SRAM" baseline)
+    platforms  compute platforms (GTX_1080TI, TPU_V5E, ...)
+
+and ``run`` lowers it to **exactly one** circuit-engine call
+(``engine.design_table`` over the unique mems x capacities) plus **one**
+workload-engine call (``workload_engine.evaluate_platforms`` over the full
+[platform] x [scenario] x [design] cross product).  The result is a tidy
+:class:`SweepResult` with labeled axes, ``rows()`` (long-format dicts),
+``norm_to("sram")`` (the figure convention), ``summary()`` aggregates, and
+CSV export.
+
+The per-analysis modules (isocap / isoarea / scaling) and the LM benchmark
+are thin adapters that build a spec and materialize their historical row
+shapes from the result — no analysis owns its own designs/fold plumbing.
+
+Specs are hashable and ``run`` is memoized, so two analyses that declare
+the same axes share one evaluation end to end (the engines memoize their
+own layers as well, so partial overlap is also shared).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections.abc import Iterable, Mapping, Sequence
+
+import numpy as np
+
+from repro.core import engine, report, workload_engine
+from repro.core.cachemodel import CacheDesign
+from repro.core.tech import Platform, GTX_1080TI
+from repro.core.traffic import TrafficStats
+from repro.core.workloads import Workload
+
+MEMS = ("sram", "stt", "sot")
+BASELINE_MEM = "sram"
+
+# The IsoCapRow.norm metric vocabulary, shared by rows()/summary().
+METRICS = ("dyn", "leak", "energy", "edp", "runtime")
+# rows() column name of each raw metric (EDP is J*s, runtime is s).
+_ROW_FIELD = {"dyn": "dyn_j", "leak": "leak_j", "energy": "energy_j",
+              "edp": "edp_js", "runtime": "runtime_s"}
+
+
+# ---------------------------------------------------------------------------
+# Axis declarations
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignPoint:
+    """One (memory technology, capacity) point of the design axis.
+
+    ``group`` labels the normalization group: each group holds exactly one
+    baseline-memory design, and ``norm_to`` divides every member by it
+    (iso-capacity/iso-area: one group; scaling: one group per capacity).
+    """
+
+    mem: str
+    capacity_bytes: int
+    group: object = 0
+
+    @property
+    def capacity_mb(self) -> float:
+        return self.capacity_bytes / 2**20
+
+
+def design_grid(mems: Sequence[str] = MEMS,
+                capacities_mb: Sequence[float] = (3,),
+                ) -> tuple[DesignPoint, ...]:
+    """Capacity-major (capacity x memory) cross product, one normalization
+    group per capacity — the iso-capacity and scaling design axes."""
+    return tuple(DesignPoint(m, int(c * 2**20), group=float(c))
+                 for c in capacities_mb for m in mems)
+
+
+def design_corners(points: Sequence[tuple[str, float]],
+                   group: object = 0) -> tuple[DesignPoint, ...]:
+    """Explicit (mem, capacity_mb) corners sharing one normalization group
+    — the iso-area design axis (different capacities, one SRAM baseline)."""
+    return tuple(DesignPoint(m, int(c * 2**20), group=group)
+                 for m, c in points)
+
+
+def workload_scenarios(workloads: Mapping[str, Workload] | Iterable[Workload],
+                       stages: Sequence[tuple[bool, int]],
+                       stage_major: bool = False,
+                       ) -> tuple[TrafficStats, ...]:
+    """Scenario axis of a (workload x stage) grid, via the shared memoized
+    ``workload_engine.stats_for``.  ``stages`` are (training, batch) pairs;
+    ``stage_major`` controls the row-major axis (scaling iterates stages
+    outermost, iso-capacity/iso-area iterate workloads outermost)."""
+    items = tuple(workloads.values() if isinstance(workloads, Mapping)
+                  else workloads)
+    if stage_major:
+        return tuple(workload_engine.stats_for(w, batch, training)
+                     for training, batch in stages for w in items)
+    return tuple(workload_engine.stats_for(w, batch, training)
+                 for w in items for training, batch in stages)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """Declarative cross-layer sweep: scenarios x designs x platforms."""
+
+    scenarios: tuple[TrafficStats, ...]
+    designs: tuple[DesignPoint, ...]
+    platforms: tuple[Platform, ...] = (GTX_1080TI,)
+    baseline_mem: str = BASELINE_MEM
+    name: str = "sweep"
+
+    def __post_init__(self) -> None:
+        if not (self.scenarios and self.designs and self.platforms):
+            raise ValueError(f"{self.name}: every axis must be non-empty")
+        keys = [(s.workload, s.batch, s.training) for s in self.scenarios]
+        if len(set(keys)) != len(keys):
+            raise ValueError(f"{self.name}: duplicate scenario keys")
+        if len(set(self.designs)) != len(self.designs):
+            raise ValueError(f"{self.name}: duplicate design points")
+
+    def run(self) -> SweepResult:
+        return run(self)
+
+
+# ---------------------------------------------------------------------------
+# Lowering: spec -> one circuit call + one workload-fold call
+# ---------------------------------------------------------------------------
+
+
+def lower_designs(points: Sequence[DesignPoint],
+                  ) -> tuple[engine.DesignTable, tuple[CacheDesign, ...]]:
+    """One memoized ``engine.design_table`` over the unique mems and
+    capacities, then the EDAP-tuned design of every point (Algorithm 1,
+    memoized per (mem, capacity) on the table)."""
+    mems = tuple(dict.fromkeys(p.mem for p in points))
+    caps = tuple(dict.fromkeys(p.capacity_bytes for p in points))
+    table = engine.design_table(mems, caps)
+    return table, tuple(table.tuned(p.mem, p.capacity_bytes) for p in points)
+
+
+@functools.lru_cache(maxsize=None)
+def _run_cached(spec: SweepSpec) -> SweepResult:
+    table, designs = lower_designs(spec.designs)
+    tables = workload_engine.evaluate_platforms(spec.scenarios, designs,
+                                                spec.platforms)
+    return SweepResult(spec=spec, design_table=table, designs=designs,
+                       tables=tables)
+
+
+def run(spec: SweepSpec) -> SweepResult:
+    """Lower and evaluate a spec: exactly one ``engine.design_table`` call
+    plus one ``workload_engine.evaluate_platforms`` call.  Memoized per
+    spec, so equal specs share one SweepResult object."""
+    return _run_cached(spec)
+
+
+def clear_cache() -> None:
+    """Drop memoized sweep results (benchmark reruns; the engine-layer
+    caches are cleared separately via their own hooks)."""
+    _run_cached.cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# Result: labeled axes + tidy views
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SweepResult:
+    """Evaluated sweep: [platform] x [scenario] x [design] tensors.
+
+    ``tables[i]`` is the WorkloadTable view of platform i (one shared
+    kernel evaluation); ``design_table`` is the circuit-engine sweep the
+    designs were tuned from.
+    """
+
+    spec: SweepSpec
+    design_table: engine.DesignTable
+    designs: tuple[CacheDesign, ...]
+    tables: tuple[workload_engine.WorkloadTable, ...]
+
+    # -- labeled axes ------------------------------------------------------
+
+    @property
+    def scenario_labels(self) -> tuple[tuple[str, int, bool], ...]:
+        """(workload, batch, training) per scenario row."""
+        return self.tables[0].scenarios
+
+    @property
+    def design_labels(self) -> tuple[tuple[str, float], ...]:
+        """(mem, capacity_mb) per design column."""
+        return tuple((p.mem, p.capacity_mb) for p in self.spec.designs)
+
+    @property
+    def platform_labels(self) -> tuple[str, ...]:
+        return tuple(p.name for p in self.spec.platforms)
+
+    @property
+    def axes(self) -> dict[str, tuple]:
+        return {"platform": self.platform_labels,
+                "scenario": self.scenario_labels,
+                "design": self.design_labels}
+
+    def design_index(self, mem: str, capacity_mb: float | None = None) -> int:
+        matches = [j for j, p in enumerate(self.spec.designs)
+                   if p.mem == mem
+                   and capacity_mb in (None, p.capacity_mb)]
+        if not matches:
+            raise ValueError(f"no design ({mem}, {capacity_mb}) in sweep")
+        if len(matches) > 1:
+            raise ValueError(f"ambiguous design ({mem}, {capacity_mb})")
+        return matches[0]
+
+    # -- metric tensors ----------------------------------------------------
+
+    def metric(self, name: str, include_dram: bool = False) -> np.ndarray:
+        """[p, s, d] tensor of one METRICS entry."""
+        return np.stack([t.metric(name, include_dram) for t in self.tables])
+
+    @property
+    def dram_tx(self) -> np.ndarray:
+        """[s, d] DRAM transactions (platform-independent)."""
+        return self.tables[0].dram_tx
+
+    @property
+    def read_write_ratio(self) -> np.ndarray:
+        """[s] L2 read/write transaction ratio (platform-independent)."""
+        return self.tables[0].read_write_ratio
+
+    # -- normalization (the paper's figure convention) ---------------------
+
+    def baseline_indices(self, baseline_mem: str | None = None) -> np.ndarray:
+        """[d] index of each design's normalization baseline: the unique
+        baseline-memory design of its group."""
+        base = baseline_mem if baseline_mem is not None \
+            else self.spec.baseline_mem
+        by_group: dict[object, int] = {}
+        for j, p in enumerate(self.spec.designs):
+            if p.mem == base:
+                if p.group in by_group:
+                    raise ValueError(
+                        f"group {p.group!r} has several {base!r} designs")
+                by_group[p.group] = j
+        missing = {p.group for p in self.spec.designs} - set(by_group)
+        if missing:
+            raise ValueError(f"groups {sorted(map(repr, missing))} have no "
+                             f"{base!r} baseline design")
+        return np.array([by_group[p.group] for p in self.spec.designs])
+
+    def norm_to(self, baseline_mem: str | None = None) -> NormalizedSweep:
+        """Metrics normalized to the baseline design of each group."""
+        return NormalizedSweep(self, self.baseline_indices(baseline_mem))
+
+    # -- tidy materialization ----------------------------------------------
+
+    def rows(self, include_norm: bool = True,
+             include_dram: bool = False) -> list[dict]:
+        """Long-format rows: one dict per (platform, scenario, design)."""
+        m = {name: self.metric(name, include_dram) for name in METRICS}
+        norm = self.norm_to() if include_norm else None
+        x = {name: norm.metric(name, include_dram)
+             for name in METRICS} if include_norm else {}
+        out = []
+        for pi, platform in enumerate(self.platform_labels):
+            for si, (workload, batch, training) in \
+                    enumerate(self.scenario_labels):
+                for di, point in enumerate(self.spec.designs):
+                    row = dict(platform=platform, workload=workload,
+                               batch=batch,
+                               stage="train" if training else "infer",
+                               mem=point.mem,
+                               capacity_mb=point.capacity_mb,
+                               group=point.group)
+                    row.update({_ROW_FIELD[k]: float(v[pi, si, di])
+                                for k, v in m.items()})
+                    row.update({f"{k}_x": float(v[pi, si, di])
+                                for k, v in x.items()})
+                    out.append(row)
+        return out
+
+    def summary(self, include_dram: bool = True) -> dict:
+        """Per-(platform, non-baseline mem) aggregate reductions over all
+        scenarios and design groups (the §IV prose-claim shape)."""
+        norm = self.norm_to()
+        energy = norm.metric("energy", include_dram=False)
+        edp = norm.metric("edp", include_dram=include_dram)
+        dyn = norm.metric("dyn")
+        leak = norm.metric("leak")
+        base = self.baseline_indices()
+        out: dict[str, dict[str, dict[str, float]]] = {}
+        for pi, platform in enumerate(self.platform_labels):
+            per_mem: dict[str, dict[str, float]] = {}
+            for mem in dict.fromkeys(p.mem for p in self.spec.designs):
+                if mem == self.spec.baseline_mem:
+                    continue
+                cols = [j for j, p in enumerate(self.spec.designs)
+                        if p.mem == mem and base[j] != j]
+                if not cols:
+                    continue
+                per_mem[mem] = dict(
+                    dyn_energy_x=float(dyn[pi][:, cols].mean()),
+                    leak_reduction=float((1.0 / leak[pi][:, cols]).mean()),
+                    energy_reduction=float(
+                        (1.0 / energy[pi][:, cols]).mean()),
+                    edp_reduction_mean=float((1.0 / edp[pi][:, cols]).mean()),
+                    edp_reduction_max=float((1.0 / edp[pi][:, cols]).max()),
+                )
+            out[platform] = per_mem
+        return out
+
+    def to_csv(self, path: str, include_norm: bool = True,
+               include_dram: bool = False) -> None:
+        report.write_csv(path, self.rows(include_norm, include_dram))
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class NormalizedSweep:
+    """View of a SweepResult with every metric divided by its group's
+    baseline design (elementwise, the scalar IsoCapRow.norm convention)."""
+
+    result: SweepResult
+    baseline: np.ndarray  # [d] baseline design index per design
+
+    def metric(self, name: str, include_dram: bool = False) -> np.ndarray:
+        m = self.result.metric(name, include_dram)
+        return m / m[:, :, self.baseline]

@@ -25,9 +25,19 @@ reproducing the scalar path's operation order exactly: the miss-curve
 ``dram_tx`` fold, the \"simple model\" runtime (compute + serialized L2 +
 DRAM stall), and the dynamic/leakage/DRAM energy terms.
 
+The platform is itself a batched axis: ``evaluate_platforms`` evaluates
+
+    [platform] x [scenario] x [design]
+
+in one kernel call (platform parameters are a [p, 4] runtime input, so
+e.g. GTX_1080TI vs TPU_V5E share one trace), returning one
+:class:`WorkloadTable` view per platform.  Platform-independent tensors
+(L2 transactions, DRAM transactions, dynamic energy) are computed once
+and shared across the views.
+
 :class:`WorkloadTable` wraps the result tensors with the same vocabulary
 the scalar API uses (``total_j``/``edp``/``EnergyReport``), and
-``evaluate`` memoizes tables per (scenarios, designs, platform) so the
+``evaluate`` memoizes tables per (scenarios, designs, platforms) so the
 iso-capacity, iso-area, and scaling analyses plus the benchmarks all share
 one evaluation — the whole cross-layer pipeline becomes two composed
 batched computations (circuit sweep, workload fold).
@@ -149,23 +159,28 @@ def _miss_tx_kernel(bytes_total, rd, visible, caps):
 
 @jax.jit
 def _fold_kernel(bytes_total, is_write, rd, visible, mask, macs,
-                 rl, wl, re_, we_, leak, caps, pvec):
-    """The full [scenario] x [design] workload fold.
+                 rl, wl, re_, we_, leak, caps, pmat):
+    """The full [platform] x [scenario] x [design] workload fold.
 
-    Streams [s, k], designs [d], platform [4] -> metric tensors [s, d].
+    Streams [s, k], designs [d], platforms [p, 4] -> platform-dependent
+    metric tensors [p, s, d] plus platform-independent [s] / [s, d] ones.
     Every expression keeps the scalar traffic.runtime/energy operation
     order so float64 results match the Python reference to the last ulps.
     """
-    peak_flops, serialization, dram_bw, dram_epb = pvec
+    peak_flops = pmat[:, 0][:, None, None]       # [p, 1, 1]
+    serialization = pmat[:, 1][:, None, None]
+    dram_bw = pmat[:, 2][:, None, None]
+    dram_epb = pmat[:, 3][:, None, None]
     bt = jnp.where(mask, bytes_total, 0.0)
     read_tx = jnp.where(is_write, 0.0, bt).sum(axis=1) / LINE_BYTES   # [s]
     write_tx = jnp.where(is_write, bt, 0.0).sum(axis=1) / LINE_BYTES
     dram_tx = _miss_tx_kernel(bt, rd, visible & mask, caps)           # [s, d]
 
-    t_compute = macs * 2.0 / (peak_flops * COMPUTE_EFFICIENCY)        # [s]
+    t_compute = macs[None, :, None] * 2.0 \
+        / (peak_flops * COMPUTE_EFFICIENCY)                           # [p, s, 1]
     t_l2 = read_tx[:, None] * rl[None, :] + write_tx[:, None] * wl[None, :]
-    runtime_nodram = t_compute[:, None] + serialization * t_l2
-    runtime = runtime_nodram + dram_tx * LINE_BYTES / dram_bw
+    runtime_nodram = t_compute + serialization * t_l2[None]           # [p, s, d]
+    runtime = runtime_nodram + (dram_tx * LINE_BYTES)[None] / dram_bw
 
     return dict(
         l2_read_tx=read_tx,
@@ -175,9 +190,9 @@ def _fold_kernel(bytes_total, is_write, rd, visible, mask, macs,
         runtime_nodram_s=runtime_nodram,
         dyn_read_j=read_tx[:, None] * re_[None, :],
         dyn_write_j=write_tx[:, None] * we_[None, :],
-        leak_j=leak[None, :] * runtime,
-        leak_nodram_j=leak[None, :] * runtime_nodram,
-        dram_j=dram_tx * LINE_BYTES * dram_epb,
+        leak_j=leak[None, None, :] * runtime,
+        leak_nodram_j=leak[None, None, :] * runtime_nodram,
+        dram_j=(dram_tx * LINE_BYTES)[None] * dram_epb,
     )
 
 
@@ -291,30 +306,52 @@ class WorkloadTable:
 # ---------------------------------------------------------------------------
 
 
+# Result-tensor names that carry a leading platform axis in the kernel
+# output; the rest are platform-independent and shared across the views.
+_PLATFORM_DEPENDENT = ("runtime_s", "runtime_nodram_s", "leak_j",
+                       "leak_nodram_j", "dram_j")
+
+
 @functools.lru_cache(maxsize=None)
 def _evaluate_cached(stats_seq: tuple[TrafficStats, ...],
                      designs: tuple[CacheDesign, ...],
-                     platform: Platform) -> WorkloadTable:
+                     platforms: tuple[Platform, ...],
+                     ) -> tuple[WorkloadTable, ...]:
     batch = pack(stats_seq)
     rl, wl, re_, we_, leak, caps = _design_vectors(designs)
+    pmat = np.stack([_platform_vector(p) for p in platforms])
     with enable_x64():
         out = _fold_kernel(batch.bytes_total, batch.is_write,
                            batch.reuse_distance, batch.dram_visible,
                            batch.mask, batch.macs,
-                           rl, wl, re_, we_, leak, caps,
-                           _platform_vector(platform))
-    return WorkloadTable(
-        scenarios=batch.keys, designs=designs, platform=platform,
-        **{k: np.asarray(v) for k, v in out.items()})
+                           rl, wl, re_, we_, leak, caps, pmat)
+    out = {k: np.asarray(v) for k, v in out.items()}
+    shared = {k: v for k, v in out.items() if k not in _PLATFORM_DEPENDENT}
+    return tuple(
+        WorkloadTable(scenarios=batch.keys, designs=designs, platform=p,
+                      **shared,
+                      **{k: out[k][i] for k in _PLATFORM_DEPENDENT})
+        for i, p in enumerate(platforms))
 
 
 def evaluate(stats_seq: Sequence[TrafficStats],
              designs: Sequence[CacheDesign],
              platform: Platform = GTX_1080TI) -> WorkloadTable:
     """Evaluate the [scenario] x [design] cross product as one batched
-    computation.  Memoized per (scenarios, designs, platform), so every
+    computation.  Memoized per (scenarios, designs, platforms), so every
     consumer of the same fold shares one kernel invocation."""
-    return _evaluate_cached(tuple(stats_seq), tuple(designs), platform)
+    return evaluate_platforms(stats_seq, designs, (platform,))[0]
+
+
+def evaluate_platforms(stats_seq: Sequence[TrafficStats],
+                       designs: Sequence[CacheDesign],
+                       platforms: Sequence[Platform] = (GTX_1080TI,),
+                       ) -> tuple[WorkloadTable, ...]:
+    """Evaluate the full [platform] x [scenario] x [design] cross product
+    as one batched kernel call and return one WorkloadTable view per
+    platform (platform-independent tensors are shared between views)."""
+    return _evaluate_cached(tuple(stats_seq), tuple(designs),
+                            tuple(platforms))
 
 
 def dram_tx(stats_seq: Sequence[TrafficStats],
@@ -327,6 +364,16 @@ def dram_tx(stats_seq: Sequence[TrafficStats],
         out = _miss_tx_kernel(batch.bytes_total, batch.reuse_distance,
                               batch.dram_visible & batch.mask, caps)
     return np.asarray(out)
+
+
+# cache_clear()/cache_info()-style hooks on the public entry points, so
+# consumers (and the cache-key-drift test in tests/test_sweep.py) can
+# observe and reset the memoization without reaching for the private
+# lru-cached implementation.
+evaluate.cache_clear = _evaluate_cached.cache_clear
+evaluate.cache_info = _evaluate_cached.cache_info
+evaluate_platforms.cache_clear = _evaluate_cached.cache_clear
+evaluate_platforms.cache_info = _evaluate_cached.cache_info
 
 
 def clear_caches() -> None:

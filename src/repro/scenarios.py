@@ -1,0 +1,101 @@
+"""Scenario registry — LM (arch x shape) cells as first-class sweep
+scenarios.
+
+The paper's CNN workloads enter the pipeline through the traffic model
+(``workload_engine.stats_for``); this module is the same entry point for
+the assigned LM architectures: every ``repro.configs`` architecture x
+{train_4k, decode_32k, long_500k} shape becomes a packed
+:class:`~repro.core.traffic.TrafficStats` built from the analytic byte
+accounting the roofline uses (``launch/flops.py``), so the whole LM study
+runs as one batched [arch-shape] x [mem, capacity] x [platform] fold on
+the workload engine.
+
+``long_500k`` (524k-token decode) is only meaningful for sub-quadratic
+architectures (SSM / hybrid / linear attention); ``lm_supported`` encodes
+that guard and ``lm_scenarios`` applies it, so quadratic-attention archs
+simply have no row for that shape.
+"""
+
+from __future__ import annotations
+
+import functools
+from collections.abc import Sequence
+
+import repro.configs as configs
+from repro.configs.base import SHAPES
+from repro.core import sweep
+from repro.core.tech import Platform, TPU_V5E
+from repro.core.traffic import INF, AccessStream, TrafficStats
+from repro.launch import flops as flops_mod
+
+# The LM study's shape axis, in row order.  long_500k rows exist only for
+# sub-quadratic architectures (see lm_supported).
+LM_SHAPES = ("train_4k", "decode_32k", "long_500k")
+LM_CAPACITY_MB = 48  # TPU-class last-level on-chip buffer (VMEM regime)
+
+
+@functools.lru_cache(maxsize=None)
+def lm_traffic(arch: str, shape_name: str) -> TrafficStats:
+    """AccessStreams of one step of an (arch x shape) cell, from the same
+    analytic model the roofline uses.  Memoized: scenarios are shared
+    across sweeps the same way ``workload_engine.stats_for`` shares the
+    paper workloads."""
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    acct = flops_mod.account(cfg, shape)
+    tokens = shape.global_batch * (1 if shape.is_decode else shape.seq_len)
+    d = cfg.d_model
+    streams = [
+        AccessStream("weights", acct.param_bytes, False, INF),
+        AccessStream("activations.r",
+                     12.0 * tokens * d * 2.0, False, 4 * tokens * d // 64),
+        AccessStream("activations.w",
+                     6.0 * tokens * d * 2.0, True, 4 * tokens * d // 64),
+        AccessStream("kv.r", acct.kv_read_bytes, False, INF),
+        AccessStream("kv.w", acct.kv_write_bytes, True, INF),
+        AccessStream("logits", tokens * cfg.vocab * 4.0, True, INF),
+    ]
+    if shape.kind == "train":
+        streams += [
+            AccessStream("grads.w", acct.param_bytes, True, INF),
+            AccessStream("opt.r", 3.0 * acct.param_bytes, False, INF),
+            AccessStream("opt.w", 2.0 * acct.param_bytes, True, INF),
+        ]
+    # KV-less cells (e.g. training) must not emit zero-byte streams: they
+    # would pollute the packed fold with degenerate entries
+    streams = [s for s in streams if s.bytes_total > 0]
+    return TrafficStats(f"{arch}/{shape_name}", shape.global_batch,
+                        shape.kind == "train", tuple(streams),
+                        macs_per_batch=acct.flops / 2.0)
+
+
+def lm_supported(arch: str, shape_name: str) -> bool:
+    """Whether an (arch, shape) cell exists: long_500k needs a
+    sub-quadratic architecture."""
+    return shape_name != "long_500k" or configs.get(arch).sub_quadratic
+
+
+def lm_scenarios(archs: Sequence[str] | None = None,
+                 shapes: Sequence[str] = LM_SHAPES,
+                 ) -> tuple[TrafficStats, ...]:
+    """Scenario axis of the LM study: arch-major over every supported
+    (arch x shape) cell."""
+    archs = tuple(archs) if archs is not None else configs.all_archs()
+    return tuple(lm_traffic(a, s) for a in archs for s in shapes
+                 if lm_supported(a, s))
+
+
+def lm_sweep_spec(capacity_mb: float = LM_CAPACITY_MB,
+                  mems: Sequence[str] = sweep.MEMS,
+                  platforms: Sequence[Platform] = (TPU_V5E,),
+                  archs: Sequence[str] | None = None,
+                  shapes: Sequence[str] = LM_SHAPES,
+                  name: str = "lm-nvm") -> sweep.SweepSpec:
+    """The LM study as one declarative sweep: every supported (arch x
+    shape) cell x every memory at the TPU-class buffer capacity x the
+    requested platforms."""
+    return sweep.SweepSpec(
+        name=name,
+        scenarios=lm_scenarios(archs, shapes),
+        designs=sweep.design_grid(mems, (capacity_mb,)),
+        platforms=tuple(platforms))

@@ -1,0 +1,352 @@
+"""Tests for the unified sweep pipeline (core/sweep.py).
+
+Three families:
+
+  parity    the sweep-backed analyses (isocap / isoarea / scaling / the
+            batched lm_nvm study) pinned to the pre-refactor scalar path
+            (traffic.build + traffic.energy per cell) at <= 1e-12 rel;
+  property  SweepSpec axis ordering never changes row labeling — rows
+            keyed by their labels are invariant under any permutation of
+            the scenario / design / platform axes;
+  caching   memoized folds are reused across analyses (same scenarios,
+            same designs -> same objects) and the cache_clear()-style
+            hooks work, guarding against silent cache-key drift.
+"""
+
+import inspect
+import random
+
+import pytest
+
+import repro.configs as configs
+from benchmarks import lm_nvm
+from repro import scenarios
+from repro.core import (isoarea, isocap, scaling, sweep, traffic, tuner,
+                        workload_engine)
+from repro.core.isocap import INFER_BATCH, TRAIN_BATCH, MEMS
+from repro.core.tech import GTX_1080TI, TPU_V5E
+from repro.core.workloads import alexnet, paper_workloads
+
+REL = 1e-12
+REPORT_FIELDS = ("runtime_s", "dyn_read_j", "dyn_write_j", "leak_j", "dram_j")
+
+
+def _assert_row_matches_scalar(row, designs, platform=GTX_1080TI):
+    """One IsoCapRow vs the pre-refactor scalar fold."""
+    w = paper_workloads()[row.workload] if row.workload != "alexnet" \
+        else alexnet()
+    stats = traffic.build(w, row.batch, row.training)
+    assert row.read_write_ratio == pytest.approx(stats.read_write_ratio,
+                                                 rel=REL)
+    for mem, design in designs.items():
+        ref = traffic.energy(stats, design, platform)
+        for f in REPORT_FIELDS:
+            assert getattr(row.reports[mem], f) == pytest.approx(
+                getattr(ref, f), rel=REL), (row.workload, mem, f)
+
+
+# ---------------------------------------------------------------------------
+# Parity: sweep-backed analyses == pre-refactor scalar outputs
+# ---------------------------------------------------------------------------
+
+
+def test_isocap_rows_match_scalar():
+    designs = isocap.designs_at(isocap.CAPACITY_MB)
+    rows = isocap.analyze()
+    assert len(rows) == 2 * len(paper_workloads())
+    for row in rows:
+        _assert_row_matches_scalar(row, designs)
+
+
+def test_isoarea_rows_match_scalar():
+    designs = isoarea.designs().as_dict()
+    rows = isoarea.analyze()
+    assert len(rows) == 2 * len(paper_workloads())
+    for row in rows:
+        _assert_row_matches_scalar(row, designs)
+
+
+def test_batch_sweep_rows_match_scalar():
+    designs = isocap.designs_at(isocap.CAPACITY_MB)
+    batches = (1, 8, 64)
+    rows = isocap.batch_sweep(alexnet(), True, batches)
+    assert [r.batch for r in rows] == list(batches)
+    for row in rows:
+        _assert_row_matches_scalar(row, designs)
+
+
+def test_dram_curve_matches_scalar():
+    curve = isoarea.dram_reduction_curve()
+    stats = traffic.build(alexnet(), INFER_BATCH, False)
+    base = stats.dram_tx(3 * 2**20)
+    for cap, red in curve.items():
+        ref = 100.0 * (1.0 - stats.dram_tx(cap * 2**20) / base)
+        assert red == pytest.approx(ref, rel=REL, abs=1e-9)
+
+
+def test_scaling_rows_match_scalar():
+    caps = (1, 4)
+    rows = scaling.workload_sweep(capacities_mb=caps)
+    table = scaling.tuned_table(caps)
+    workloads = paper_workloads()
+    it = iter(rows)
+    for cap in caps:
+        designs = {m: table.tuned(m, int(cap * 2**20)) for m in MEMS}
+        for training, batch in ((False, INFER_BATCH), (True, TRAIN_BATCH)):
+            stats = {n: traffic.build(w, batch, training)
+                     for n, w in workloads.items()}
+            sram = {n: traffic.energy(stats[n], designs["sram"])
+                    for n in workloads}
+            for mem in ("stt", "sot"):
+                row = next(it)
+                assert (row.capacity_mb, row.mem, row.training) == \
+                    (cap, mem, training)
+                ex, lx, ed = [], [], []
+                for n in workloads:
+                    r = traffic.energy(stats[n], designs[mem])
+                    ex.append(r.total_j(False) / sram[n].total_j(False))
+                    lx.append(r.runtime_s / sram[n].runtime_s)
+                    ed.append(r.edp(True) / sram[n].edp(True))
+                assert row.energy_x == pytest.approx(
+                    sum(ex) / len(ex), rel=REL)
+                assert row.latency_x == pytest.approx(
+                    sum(lx) / len(lx), rel=REL)
+                assert row.edp_x == pytest.approx(sum(ed) / len(ed), rel=REL)
+    assert next(it, None) is None
+
+
+def test_lm_rows_match_scalar():
+    """The batched lm_nvm fold == the pre-refactor per-cell scalar loop,
+    on both platforms, including the long_500k cells the fixed guard now
+    admits."""
+    out = lm_nvm.run(quick=True)
+    designs = {m: tuner.tuned_design(m, scenarios.LM_CAPACITY_MB)
+               for m in MEMS}
+    platforms = {p.name: p for p in lm_nvm.PLATFORMS}
+    assert any(r["shape"] == "long_500k" for r in out["rows"])
+    for row in out["rows"]:
+        stats = scenarios.lm_traffic(row["arch"], row["shape"])
+        reps = {m: traffic.energy(stats, d, platforms[row["platform"]])
+                for m, d in designs.items()}
+        assert row["rw_ratio"] == pytest.approx(stats.read_write_ratio,
+                                                rel=REL)
+        for mem in ("stt", "sot"):
+            assert row[f"{mem}_energy_red"] == pytest.approx(
+                reps["sram"].total_j(False) / reps[mem].total_j(False),
+                rel=REL)
+            assert row[f"{mem}_edp_red"] == pytest.approx(
+                reps["sram"].edp(True) / reps[mem].edp(True), rel=REL)
+
+
+def test_analyses_route_through_sweep_only():
+    """The acceptance criterion, enforced at the source level: no
+    per-analysis engine/fold plumbing and no scalar energy calls."""
+    for mod in (isocap, isoarea, scaling):
+        src = inspect.getsource(mod)
+        assert "engine.design_table(" not in src, mod.__name__
+        assert "workload_engine.evaluate" not in src, mod.__name__
+        assert "workload_engine.stats_for(" not in src, mod.__name__
+    assert "traffic.energy(" not in inspect.getsource(lm_nvm)
+
+
+# ---------------------------------------------------------------------------
+# The long_500k guard (the dead-branch fix)
+# ---------------------------------------------------------------------------
+
+
+def test_long_500k_guard_fires():
+    names = [s.workload for s in scenarios.lm_scenarios()]
+    subq = [a for a in configs.all_archs() if configs.get(a).sub_quadratic]
+    assert subq, "no sub-quadratic arch: the guard could never fire"
+    for arch in configs.all_archs():
+        assert (f"{arch}/long_500k" in names) == \
+            configs.get(arch).sub_quadratic, arch
+        for shape in ("train_4k", "decode_32k"):
+            assert f"{arch}/{shape}" in names
+
+
+def test_lm_supported():
+    assert scenarios.lm_supported("rwkv6-3b", "long_500k")
+    assert not scenarios.lm_supported("tinyllama-1.1b", "long_500k")
+    assert scenarios.lm_supported("tinyllama-1.1b", "decode_32k")
+
+
+# ---------------------------------------------------------------------------
+# Property: axis ordering never changes row labeling
+# ---------------------------------------------------------------------------
+
+
+def _row_key(r):
+    return (r["platform"], r["workload"], r["batch"], r["stage"],
+            r["mem"], r["capacity_mb"], r["group"])
+
+
+def _small_spec(scenarios_, designs_, platforms_, name):
+    return sweep.SweepSpec(name=name, scenarios=tuple(scenarios_),
+                           designs=tuple(designs_),
+                           platforms=tuple(platforms_))
+
+
+@pytest.fixture(scope="module")
+def perm_base():
+    workloads = dict(list(paper_workloads().items())[:3])
+    spec = _small_spec(
+        sweep.workload_scenarios(workloads, ((False, 4), (True, 8))),
+        sweep.design_grid(MEMS, (1, 2)),
+        (GTX_1080TI, TPU_V5E),
+        "perm-base")
+    return spec, {_row_key(r): r
+                  for r in sweep.run(spec).rows(include_dram=True)}
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_axis_permutation_keeps_row_labeling(perm_base, seed):
+    """Rows keyed by their axis labels are invariant under any
+    permutation of the scenario, design, and platform axes."""
+    spec, base_rows = perm_base
+    rng = random.Random(seed)
+    scenarios_ = list(spec.scenarios)
+    designs_ = list(spec.designs)
+    platforms_ = list(spec.platforms)
+    rng.shuffle(scenarios_)
+    rng.shuffle(designs_)
+    rng.shuffle(platforms_)
+    permuted = _small_spec(scenarios_, designs_, platforms_,
+                           f"perm-{seed}")
+    rows = {_row_key(r): r
+            for r in sweep.run(permuted).rows(include_dram=True)}
+    assert rows.keys() == base_rows.keys()
+    for k, row in rows.items():
+        ref = base_rows[k]
+        assert row.keys() == ref.keys()
+        for field, v in row.items():
+            if isinstance(v, float):
+                assert v == pytest.approx(ref[field], rel=1e-15), (k, field)
+            else:
+                assert v == ref[field], (k, field)
+
+
+# ---------------------------------------------------------------------------
+# Memoization: shared folds across analyses, cache hooks
+# ---------------------------------------------------------------------------
+
+
+def test_run_memoized_identity():
+    spec1 = _small_spec(
+        sweep.workload_scenarios((alexnet(),), ((False, 4),)),
+        sweep.design_grid(MEMS, (3,)),
+        (GTX_1080TI,), "memo")
+    spec2 = _small_spec(
+        sweep.workload_scenarios((alexnet(),), ((False, 4),)),
+        sweep.design_grid(MEMS, (3,)),
+        (GTX_1080TI,), "memo")
+    assert spec1 == spec2
+    res = sweep.run(spec1)
+    assert sweep.run(spec2) is res
+    # the fold table is the shared memoized workload-engine evaluation
+    assert workload_engine.evaluate_platforms(
+        spec1.scenarios, res.designs, spec1.platforms)[0] is res.tables[0]
+
+
+def test_memoization_reused_across_analyses():
+    """isocap -> isoarea share scenario statistics; repeating an analysis
+    adds no new fold evaluations (no silent cache-key drift)."""
+    res = sweep.run(lm_nvm.spec(quick=True))
+    isocap.analyze()
+    ev = workload_engine.evaluate_platforms.cache_info()
+    isocap.analyze()  # equal spec: memoized end to end, no new fold
+    assert workload_engine.evaluate_platforms.cache_info().misses == \
+        ev.misses
+    # re-requesting the same fold directly hits the engine cache
+    assert workload_engine.evaluate_platforms(
+        res.spec.scenarios, res.designs, res.spec.platforms) \
+        is res.tables
+    stats_info = workload_engine.stats_for.cache_info()
+    isoarea.analyze()  # same (workload, batch, training) scenarios
+    assert workload_engine.stats_for.cache_info().misses == \
+        stats_info.misses
+
+
+def test_cache_clear_hooks():
+    isocap.analyze()
+    assert workload_engine.evaluate.cache_info().currsize > 0
+    workload_engine.evaluate.cache_clear()
+    assert workload_engine.evaluate.cache_info().currsize == 0
+    assert workload_engine.evaluate_platforms.cache_info().currsize == 0
+    sweep.clear_cache()  # results referencing dropped tables also go
+    isocap.analyze()     # and the pipeline rebuilds cleanly
+    assert workload_engine.evaluate.cache_info().currsize > 0
+
+
+# ---------------------------------------------------------------------------
+# SweepResult surface
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_result():
+    spec = _small_spec(
+        sweep.workload_scenarios((alexnet(),), ((False, 4), (True, 8))),
+        sweep.design_grid(MEMS, (1, 2)),
+        (GTX_1080TI, TPU_V5E), "surface")
+    return sweep.run(spec)
+
+
+def test_axes_and_rows_shape(small_result):
+    axes = small_result.axes
+    assert len(axes["platform"]) == 2
+    assert len(axes["scenario"]) == 2
+    assert len(axes["design"]) == 6
+    rows = small_result.rows()
+    assert len(rows) == 2 * 2 * 6
+    assert {r["platform"] for r in rows} == {"gtx-1080ti", "tpu-v5e"}
+
+
+def test_norm_baseline_is_one(small_result):
+    norm = small_result.norm_to()
+    for name in sweep.METRICS:
+        x = norm.metric(name)
+        for j, (mem, _) in enumerate(small_result.design_labels):
+            if mem == "sram":
+                assert x[:, :, j] == pytest.approx(1.0)
+
+
+def test_metric_matches_tables(small_result):
+    m = small_result.metric("edp", include_dram=True)
+    for pi, table in enumerate(small_result.tables):
+        assert (m[pi] == table.edp(True)).all()
+
+
+def test_summary_structure(small_result):
+    s = small_result.summary()
+    assert set(s) == {"gtx-1080ti", "tpu-v5e"}
+    for per_mem in s.values():
+        assert set(per_mem) == {"stt", "sot"}
+        for v in per_mem.values():
+            assert v["edp_reduction_max"] >= v["edp_reduction_mean"] > 0
+
+
+def test_to_csv(small_result, tmp_path):
+    path = tmp_path / "sweep.csv"
+    small_result.to_csv(str(path))
+    lines = path.read_text().strip().splitlines()
+    assert len(lines) == 1 + len(small_result.rows())
+    assert lines[0].startswith("platform,workload,batch,stage,mem")
+
+
+def test_spec_validation():
+    scen = sweep.workload_scenarios((alexnet(),), ((False, 4),))
+    designs = sweep.design_grid(MEMS, (3,))
+    with pytest.raises(ValueError):
+        sweep.SweepSpec(scenarios=(), designs=designs)
+    with pytest.raises(ValueError):
+        sweep.SweepSpec(scenarios=scen + scen, designs=designs)
+    with pytest.raises(ValueError):
+        sweep.SweepSpec(scenarios=scen, designs=designs + designs)
+    # a group without a baseline design only fails at normalization time
+    no_base = sweep.SweepSpec(
+        scenarios=scen, designs=sweep.design_grid(("stt", "sot"), (3,)))
+    with pytest.raises(ValueError):
+        sweep.run(no_base).norm_to()
+    with pytest.raises(ValueError):
+        sweep.run(no_base).design_index("sram")
