@@ -1,0 +1,45 @@
+"""Beyond-paper: cross-node DTCO sweep on the batched TechNode axis.
+
+The paper's Fig. 9 argument (SRAM leakage makes large LLCs unscalable;
+MRAM stays flat) projected across technology nodes: one ``design_table``
+call evaluates every (node x memory x capacity x organization) design
+point for 16/12/10/7 nm, and one workload fold produces the iso-capacity
+EDP/leakage trend per node — the study Mishty & Sadi (2023) assemble
+per-node by hand.
+
+Derived headline: SRAM leakage growth from 16 nm to the smallest node and
+the widening MRAM leakage/EDP gap at the two ends of the node axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import dtco
+from repro.core.workloads import paper_workloads
+
+QUICK_WORKLOADS = 2  # first N paper workloads in --quick mode
+
+
+def run(quick: bool = False) -> dict:
+    nodes = (dtco.NODES[0], dtco.NODES[-1]) if quick else dtco.NODES
+    workloads = dict(list(paper_workloads().items())[:QUICK_WORKLOADS]) \
+        if quick else None
+    rows = dtco.analyze(workloads=workloads, nodes=nodes)
+    head = dtco.headline(rows)
+    last_nm = rows[-1].feature_nm
+    derived = (
+        f"sram_leak {head['sram']['leak_w_first']:.2f}W@16nm->"
+        f"{head['sram']['leak_w_last']:.2f}W@{last_nm:g}nm"
+        f"(x{head['sram']['leak_growth']:.2f}),"
+        f"leak_red@{last_nm:g}nm stt={head['stt']['leak_reduction_last']:.1f}"
+        f"x,sot={head['sot']['leak_reduction_last']:.1f}x,"
+        f"edp_red@{last_nm:g}nm stt={head['stt']['edp_reduction_last']:.2f}"
+        f"x,sot={head['sot']['edp_reduction_last']:.2f}x,"
+        f"{len(nodes)}nodes")
+    return {"rows": [dataclasses.asdict(r) for r in rows],
+            "derived": derived}
+
+
+if __name__ == "__main__":
+    print(run()["derived"])

@@ -5,8 +5,8 @@ quantities vs the paper's values) and writes detailed per-row CSVs to
 runs/benchmarks/.
 
 ``--only MODULE`` (repeatable, comma-separated) restricts the run — the
-CI benchmark-smoke job runs ``--only fig3_4_isocap,lm_nvm --quick`` so
-analysis-layer regressions fail fast.  ``--quick`` is forwarded to
+CI benchmark-smoke job runs ``--only fig3_4_isocap,lm_nvm,fig_dtco
+--quick`` so analysis-layer regressions fail fast.  ``--quick`` is forwarded to
 modules whose ``run`` accepts a ``quick`` keyword (reduced reps / arch
 sets); the rest run unchanged.
 """
@@ -28,6 +28,7 @@ MODULES = (
     "fig6_dram",
     "fig7_8_isoarea",
     "fig9_10_scaling",
+    "fig_dtco",
     "lm_nvm",
     "bench_engine",
     "bench_workload_engine",

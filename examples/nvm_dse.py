@@ -1,15 +1,15 @@
 """Design-space exploration with DeepNVM++ (the paper's framework claim):
-sweep technology x capacity x workload x platform and emit the EDP
-landscape.
+sweep technology x capacity x workload x platform — and, for the DTCO
+section, x technology node — and emit the EDP landscape.
 
 The whole pipeline is one declarative SweepSpec: it lowers to a single
-circuit-engine evaluation of every (tech x capacity x organization)
+circuit-engine evaluation of every (node x tech x capacity x organization)
 design point plus a single workload-engine fold of every workload through
 every tuned design on every platform.
 
     PYTHONPATH=src python examples/nvm_dse.py
 """
-from repro.core import sweep
+from repro.core import dtco, sweep
 from repro.core.report import markdown_table
 from repro.core.tech import GTX_1080TI, TPU_V5E
 from repro.core.workloads import paper_workloads
@@ -33,3 +33,20 @@ rows = [dict(platform=r["platform"], capacity_mb=r["capacity_mb"],
 print(markdown_table(rows))
 best = max(rows, key=lambda r: r["edp_reduction"])
 print("\nbest design point:", best)
+
+# -- cross-node DTCO: the node as one more batched axis ----------------------
+# One design_table call covers 16/12/10/7 nm; every node is normalized to
+# its own SRAM baseline (the per-node comparison DTCO studies make).
+trend = dtco.analyze(capacity_mb=3)
+print("\ncross-node iso-capacity trend (3 MB, GTX 1080 Ti workloads):")
+print(markdown_table([dict(node=r.node, mem=r.mem,
+                           leakage_w=round(r.leakage_w, 3),
+                           leak_x=round(r.leak_x, 4),
+                           edp_x=round(r.edp_x, 4))
+                      for r in trend]))
+head = dtco.headline(trend)
+print(f"\nSRAM leakage {head['sram']['leak_w_first']:.2f} W @16nm -> "
+      f"{head['sram']['leak_w_last']:.2f} W @7nm "
+      f"(x{head['sram']['leak_growth']:.2f}); "
+      f"SOT EDP reduction {head['sot']['edp_reduction_first']:.2f}x @16nm -> "
+      f"{head['sot']['edp_reduction_last']:.2f}x @7nm")

@@ -9,6 +9,7 @@ Layers (paper Fig. 2):
     cachesim           trace/analytic DRAM model               (SIII-D)
     sweep              one declarative SweepSpec driving both engines
     isocap / isoarea / scaling   architecture-level analyses   (Figs 3-10)
+    dtco               cross-node DTCO sweep on the batched node axis
 """
 
 from repro.core import (  # noqa: F401
@@ -16,6 +17,7 @@ from repro.core import (  # noqa: F401
     cachemodel,
     cachesim,
     calibration,
+    dtco,
     engine,
     isoarea,
     isocap,

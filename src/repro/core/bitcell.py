@@ -169,8 +169,11 @@ def sram_bitcell(node: TechNode = TECH_16NM) -> Bitcell:
 
     SRAM has no MTJ: reads/writes are bitline (dis)charge events, fast and
     symmetric; the storage cell itself leaks continuously (the scalability
-    problem the paper targets).  Cell leakage is calibrated so the 3 MB
-    EDAP-tuned cache reproduces Table II's 6442 mW (see calibration.py).
+    problem the paper targets).  Cell leakage comes from the node:
+    ``TechNode.sram_cell_leak_w`` is calibrated at the 16 nm anchor so the
+    3 MB EDAP-tuned cache reproduces Table II's 6442 mW, and scaled nodes
+    carry their own (worsening) projection — the cross-node SRAM leakage
+    trend the DTCO analysis reads.
     """
     t_rw = 120e-12        # intrinsic 6T read/write time at 16 nm
     e_rw = 1.3e-15        # ~fJ/bit bitline swing energy
@@ -185,7 +188,7 @@ def sram_bitcell(node: TechNode = TECH_16NM) -> Bitcell:
         fins_read=2,
         fins_write=2,
         area_norm=1.0,
-        cell_leakage_w=2.143e-7,  # calibrated: Table II leakage anchor
+        cell_leakage_w=node.sram_cell_leak_w,
         read_current_a=2 * node.ion_per_fin_a,
     )
 

@@ -139,7 +139,8 @@ class CacheModel:
         self.mem = mem
         self.node = node
         self.cell = cell if cell is not None else characterize(mem, node)
-        self.cal = calibration if calibration is not None else _cal.get(mem)
+        self.cal = calibration if calibration is not None \
+            else _cal.get(mem, node)
 
     # -- geometry ------------------------------------------------------------
 
@@ -283,17 +284,17 @@ class CacheModel:
         orgs = tuple(orgs)
         out = engine.evaluate((capacity_bytes,), orgs, mems=(self.mem,),
                               cells=(self.cell,), cals=(self.cal,),
-                              node=self.node)
+                              nodes=self.node)
         return [CacheDesign(
             mem=self.mem,
             capacity_bytes=capacity_bytes,
             org=org,
-            read_latency_s=float(out["read_latency_s"][0, 0, i]),
-            write_latency_s=float(out["write_latency_s"][0, 0, i]),
-            read_energy_j=float(out["read_energy_j"][0, 0, i]),
-            write_energy_j=float(out["write_energy_j"][0, 0, i]),
-            leakage_w=float(out["leakage_w"][0, 0]),
-            area_mm2=float(out["area_mm2"][0, 0]),
+            read_latency_s=float(out["read_latency_s"][0, 0, 0, i]),
+            write_latency_s=float(out["write_latency_s"][0, 0, 0, i]),
+            read_energy_j=float(out["read_energy_j"][0, 0, 0, i]),
+            write_energy_j=float(out["write_energy_j"][0, 0, 0, i]),
+            leakage_w=float(out["leakage_w"][0, 0, 0]),
+            area_mm2=float(out["area_mm2"][0, 0, 0]),
         ) for i, org in enumerate(orgs)]
 
     def evaluate_scalar(self, capacity_bytes: int, org: CacheOrg) -> CacheDesign:

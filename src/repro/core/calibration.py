@@ -22,13 +22,24 @@ Two kinds of constants:
 
 All paper anchor values live here so benchmarks/tests validate against a
 single source of truth.
+
+Technology nodes: the fit above is anchored at 16 nm (the paper's PDK).
+``get(mem, node)`` keeps that fixed point as the single anchor and derives
+non-anchor-node calibrations by scaling it — periphery area with the node's
+logic-area factor, periphery leakage with the node's leakage factor, the
+dimensionless k_* multipliers unchanged (the structural model they multiply
+already reads the node parameters).  Only nodes produced by
+``tech.scaled_node`` carry that rule; any other node raises instead of
+silently inheriting 16 nm multipliers.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-import math
+
+from repro.core import tech
+from repro.core.tech import TechNode, TECH_16NM
 
 # ---------------------------------------------------------------------------
 # Paper anchors (single source of truth for tests/benchmarks)
@@ -117,9 +128,38 @@ _BASE = {
 }
 
 
+def _has_derivation_rule(node: TechNode) -> bool:
+    """A node is calibratable iff it is the 16 nm anchor or was produced by
+    ``tech.scaled_node`` (reconstructing it through the scaling rule is
+    exact for those and only those)."""
+    return node == TECH_16NM or \
+        tech.scaled_node(node.feature_size_m, name=node.name) == node
+
+
 @functools.cache
-def get(mem: str) -> Calibration:
-    """Fully fitted calibration for `mem` (fixed-point fit, cached)."""
+def _get_cached(mem: str, node: TechNode) -> Calibration:
+    if node != TECH_16NM:
+        # Derived-node rule: the multipliers k_* are dimensionless factors
+        # on the structural model — which itself reads the node parameters —
+        # so they transfer from the anchor unchanged; the absolute periphery
+        # fits scale with the node (logic area as s^PERI_AREA_EXP, periphery
+        # leakage as s^PERI_LEAK_EXP).  Anything else (a hand-crafted node)
+        # has no rule and must not silently inherit 16 nm constants — the
+        # cross-node extrapolation failure mode Roy et al. (2023) warn about.
+        if not _has_derivation_rule(node):
+            raise ValueError(
+                f"no calibration derivation rule for node {node.name!r}: "
+                "use tech.TECH_16NM or a tech.scaled_node(...) projection")
+        anchor_cal = _get_cached(mem, TECH_16NM)
+        s = tech.scale_factor(node)
+        return dataclasses.replace(
+            anchor_cal,
+            peri_area_lin=anchor_cal.peri_area_lin * s ** tech.PERI_AREA_EXP,
+            peri_area_sqrt=anchor_cal.peri_area_sqrt * s ** tech.PERI_AREA_EXP,
+            leak_lin=anchor_cal.leak_lin * s ** tech.PERI_LEAK_EXP,
+            leak_sqrt=anchor_cal.leak_sqrt * s ** tech.PERI_LEAK_EXP,
+        )
+
     from repro.core.cachemodel import CacheModel
     from repro.core.tuner import tune
 
@@ -138,6 +178,15 @@ def get(mem: str) -> Calibration:
             k_write_e=anchor["we"] * 1e-9 / (design.write_energy_j / cal.k_write_e),
         )
     return cal
+
+
+def get(mem: str, node: TechNode = TECH_16NM) -> Calibration:
+    """Fully fitted calibration for `mem` at `node` (cached).
+
+    The 16 nm anchor runs the Table II fixed-point fit; nodes produced by
+    ``tech.scaled_node`` derive from that fit via the documented scaling
+    rule; any other node raises (no silent 16 nm reuse)."""
+    return _get_cached(mem, node)
 
 
 IDENTITY = Calibration(peri_area_lin=0.38, peri_area_sqrt=0.24,

@@ -1,0 +1,131 @@
+"""Cross-node DTCO analysis — the paper's framework claim taken across
+technology nodes.
+
+DeepNVM++'s pitch is that one cross-layer stack characterizes any NVM
+technology at any node; Mishty & Sadi (2023) run exactly such a
+design-technology co-optimization (DTCO) study for SOT-MRAM, one node at a
+time, by hand.  With the technology node a first-class batched axis the
+whole cross-node study is one declarative sweep: every (node x memory)
+EDAP-tuned design at a fixed (iso-capacity) last-level cache size, folded
+through the paper workloads in a single circuit-engine call plus a single
+workload-engine call.
+
+Each node is its own normalization group — a 7 nm STT cache is compared
+against the 7 nm SRAM baseline, never the 16 nm one — which is the
+per-node comparison the DTCO papers make.  The headline trend is the
+paper's Fig. 9 argument projected across nodes: the 6T SRAM cell's leakage
+worsens as the node shrinks (tech.SCALING_EXPONENTS) while the MRAM
+flavors' storage cells do not leak, so the leakage (and with it EDP) gap
+widens monotonically from 16 nm down to 7 nm.
+
+Node parameters at non-anchor nodes are first-order Dennard-style
+projections from the calibrated 16 nm anchor (``tech.scaled_node``); the
+periphery timing/energy building blocks of cachemodel.py stay at their
+anchor values, so the cross-node signal is carried by supply, drive,
+cell-area, and leakage scaling — a qualitative DTCO projection, not a
+re-calibration per node.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections.abc import Sequence
+
+from repro.core import sweep
+from repro.core.isocap import CAPACITY_MB, INFER_BATCH, TRAIN_BATCH, MEMS
+from repro.core.tech import (GTX_1080TI, Platform, TechNode,
+                             TECH_16NM, TECH_12NM, TECH_10NM, TECH_7NM)
+from repro.core.workloads import Workload, paper_workloads
+
+# The DTCO node axis: the calibrated anchor plus the scaled projections.
+NODES = (TECH_16NM, TECH_12NM, TECH_10NM, TECH_7NM)
+
+
+@dataclasses.dataclass(frozen=True)
+class DTCORow:
+    """One (node, memory) column of the cross-node iso-capacity study."""
+
+    node: str
+    feature_nm: float
+    mem: str
+    capacity_mb: float
+    leakage_w: float     # tuned-design leakage power (circuit layer)
+    area_mm2: float
+    # Workload-mean metrics normalized to the same-node SRAM baseline.
+    energy_x: float
+    leak_x: float
+    edp_x: float
+    runtime_x: float
+
+
+def spec(workloads: dict[str, Workload] | None = None,
+         capacity_mb: float = CAPACITY_MB,
+         nodes: Sequence[TechNode] = NODES,
+         platform: Platform = GTX_1080TI,
+         infer_batch: int = INFER_BATCH,
+         train_batch: int = TRAIN_BATCH) -> sweep.SweepSpec:
+    """The cross-node study as one declarative sweep: (workload x stage)
+    scenarios x (node x memory) iso-capacity designs."""
+    workloads = workloads if workloads is not None else paper_workloads()
+    return sweep.SweepSpec(
+        name="dtco",
+        scenarios=sweep.workload_scenarios(
+            workloads, ((False, infer_batch), (True, train_batch))),
+        designs=sweep.design_grid(MEMS, (capacity_mb,), nodes=nodes),
+        platforms=(platform,))
+
+
+def analyze(workloads: dict[str, Workload] | None = None,
+            capacity_mb: float = CAPACITY_MB,
+            nodes: Sequence[TechNode] = NODES,
+            platform: Platform = GTX_1080TI,
+            infer_batch: int = INFER_BATCH,
+            train_batch: int = TRAIN_BATCH) -> list[DTCORow]:
+    """One DTCORow per (node, memory): circuit-layer leakage/area of the
+    tuned design plus scenario-mean normalized workload metrics."""
+    s = spec(workloads, capacity_mb, nodes, platform,
+             infer_batch, train_batch)
+    res = sweep.run(s)
+    norm = res.norm_to()
+    m = {name: norm.metric(name, include_dram=(name == "edp"))
+         for name in ("energy", "leak", "edp", "runtime")}
+    rows = []
+    for j, p in enumerate(s.designs):
+        d = res.designs[j]
+        rows.append(DTCORow(
+            node=p.node.name,
+            feature_nm=p.node.feature_size_m * 1e9,
+            mem=p.mem,
+            capacity_mb=p.capacity_mb,
+            leakage_w=d.leakage_w,
+            area_mm2=d.area_mm2,
+            energy_x=float(m["energy"][0, :, j].mean()),
+            leak_x=float(m["leak"][0, :, j].mean()),
+            edp_x=float(m["edp"][0, :, j].mean()),
+            runtime_x=float(m["runtime"][0, :, j].mean()),
+        ))
+    return rows
+
+
+def headline(rows: Sequence[DTCORow]) -> dict[str, dict[str, float]]:
+    """Cross-node trend claims: SRAM leakage growth from the first to the
+    last node of the sweep, and each MRAM flavor's leakage/EDP reduction at
+    both ends (the widening-gap argument)."""
+    by = {(r.node, r.mem): r for r in rows}
+    node_order = list(dict.fromkeys(r.node for r in rows))
+    first, last = node_order[0], node_order[-1]
+    out: dict[str, dict[str, float]] = {
+        "sram": dict(
+            leak_w_first=by[first, "sram"].leakage_w,
+            leak_w_last=by[last, "sram"].leakage_w,
+            leak_growth=by[last, "sram"].leakage_w
+            / by[first, "sram"].leakage_w,
+        )}
+    for mem in ("stt", "sot"):
+        out[mem] = dict(
+            leak_reduction_first=1.0 / by[first, mem].leak_x,
+            leak_reduction_last=1.0 / by[last, mem].leak_x,
+            edp_reduction_first=1.0 / by[first, mem].edp_x,
+            edp_reduction_last=1.0 / by[last, mem].edp_x,
+        )
+    return out

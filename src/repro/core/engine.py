@@ -9,17 +9,22 @@ this module evaluates it as a single batched tensor computation.
 Representation: structure-of-arrays.  The organization grid is four flat
 arrays (banks, rows, cols, access index) in exactly the order the scalar
 ``CacheModel.design_space`` iterates (itertools.product over the same
-choices), so argmin tie-breaking matches the scalar ``min``.  Technologies
-are rows of two parameter matrices — the characterized bitcell vector
-(bitcell.ARRAY_FIELDS) and the calibration vector (CAL_FIELDS) — and
-capacities are a third axis.  One jitted function maps the cross product
+choices), so argmin tie-breaking matches the scalar ``min``.  Technology
+nodes are rows of a node parameter matrix (NODE_FIELDS) and, per node,
+technologies are rows of two parameter matrices — the characterized
+bitcell vector (bitcell.ARRAY_FIELDS, node-dependent through the fin
+sweep) and the calibration vector (CAL_FIELDS, node-dependent through the
+derivation rule of calibration.get) — with capacities a further axis.
+One jitted function maps the cross product
 
-    [n_tech] x [n_cap] x [n_org]  ->  PPA tensors of shape [m, c, o]
+    [node] x [tech] x [cap] x [org]  ->  PPA tensors of shape [n, m, c, o]
 
 re-expressing every latency/energy/leakage/area equation of cachemodel.py
 as a pure array function.  Float64 throughout (jax.experimental.enable_x64)
 so the batched numbers agree with the scalar Python-float path to the last
-few ulps, keeping the Table I/II calibration anchors intact.
+few ulps, keeping the Table I/II calibration anchors intact.  A cross-node
+DTCO sweep (Mishty & Sadi 2023 run their SOT-MRAM study per node by hand)
+is therefore one ``design_table`` call with several nodes.
 
 On top of the PPA tensors, :class:`DesignTable` implements Algorithm 1 as a
 masked argmin per (optimization target, access type) — the same nominee
@@ -27,9 +32,9 @@ pool and the same first-strict-minimum EDAP tie-breaking as the scalar
 ``tuner.tune`` — plus vectorized feasibility queries (iso-area capacity
 search) that need no per-capacity tuning at all.
 
-``design_table`` memoizes fully-calibrated tables per (mems, capacities)
-so every consumer — tuner, isocap, isoarea, scaling, benchmarks — shares
-one evaluation of the sweep.
+``design_table`` memoizes fully-calibrated tables per (nodes, mems,
+capacities) so every consumer — tuner, isocap, isoarea, scaling, dtco,
+benchmarks — shares one evaluation of the sweep.
 """
 
 from __future__ import annotations
@@ -121,42 +126,46 @@ def valid_mask(capacities_bytes: np.ndarray) -> np.ndarray:
 def _ppa_kernel(cell, cal, is_sram, node, caps_bytes, banks, rows, cols, acc):
     """PPA equations of cachemodel.py as one batched map.
 
-    cell [m, 7] (bitcell.ARRAY_FIELDS), cal [m, 8] (CAL_FIELDS),
-    is_sram [m], node [4] (NODE_FIELDS), caps_bytes [c],
-    banks/rows/cols/acc [o]  ->  dict of [m, c, o] / [m, c] tensors.
+    cell [n, m, 7] (bitcell.ARRAY_FIELDS), cal [n, m, 8] (CAL_FIELDS),
+    is_sram [m], node [n, 4] (NODE_FIELDS), caps_bytes [c],
+    banks/rows/cols/acc [o]  ->  dict of [n, m, c, o] / [n, m, c] tensors.
 
     Every expression keeps the scalar path's operation order so float64
     results match the Python-float reference to the last ulps.
     """
-    # broadcast axes: m = technology, c = capacity, o = organization
-    def M(x):      # [m] -> [m, 1, 1]
-        return x[:, None, None]
+    # broadcast axes: n = node, m = technology, c = capacity, o = org
+    def M(x):      # [n, m] -> [n, m, 1, 1]
+        return x[:, :, None, None]
 
-    vdd, ion, sense_v, sram_cell_um2 = node
+    def N(x):      # [n] -> [n, 1, 1, 1]
+        return x[:, None, None, None]
+
+    vdd, ion, sense_v, sram_cell_um2 = (N(node[:, i])
+                                        for i in range(node.shape[1]))
     (i_read, sense_lat, sense_e, wlat_avg, we_avg, area_norm,
-     cell_leak) = (M(cell[:, i]) for i in range(cell.shape[1]))
+     cell_leak) = (M(cell[:, :, i]) for i in range(cell.shape[2]))
     (peri_area_lin, peri_area_sqrt, leak_lin, leak_sqrt,
      k_read_lat, k_write_lat, k_read_e, k_write_e) = (
-        M(cal[:, i]) for i in range(cal.shape[1]))
-    sram = M(is_sram)
+        M(cal[:, :, i]) for i in range(cal.shape[2]))
+    sram = is_sram[None, :, None, None]
 
-    cap = caps_bytes[None, :, None].astype(jnp.float64)       # [1, c, 1]
+    cap = caps_bytes[None, None, :, None].astype(jnp.float64)  # [1, 1, c, 1]
     cap_mb = cap / 2**20
     data_bits = cap * 8
     tag_bits = jnp.floor(cap / LINE_BYTES) * TAG_BITS
     bits_total = data_bits + tag_bits
 
-    banks = banks[None, None, :].astype(jnp.float64)          # [1, 1, o]
-    rows = rows[None, None, :].astype(jnp.float64)
-    cols = cols[None, None, :].astype(jnp.float64)
-    acc = acc[None, None, :]
+    banks = banks[None, None, None, :].astype(jnp.float64)    # [1, 1, 1, o]
+    rows = rows[None, None, None, :].astype(jnp.float64)
+    cols = cols[None, None, None, :].astype(jnp.float64)
+    acc = acc[None, None, None, :]
 
     # -- geometry (CacheModel._subarrays / area_mm2 / _htree_mm) -----------
     n_sub = jnp.maximum(1.0, jnp.ceil(bits_total / (rows * cols)))
     cell_um2 = area_norm * sram_cell_um2
     array_area = bits_total * cell_um2 * 1e-6 / 0.85          # mm2_from_um2
     peri_area = peri_area_lin * cap_mb + peri_area_sqrt * jnp.sqrt(cap_mb)
-    area = array_area + peri_area                             # [m, c, 1]
+    area = array_area + peri_area                             # [n, m, c, 1]
     htree_mm = jnp.sqrt(area) * (1.0 + jnp.log2(banks) / 8.0)
 
     stress_base = cap / 2**20 / _STRESS_ANCHOR_MB
@@ -201,7 +210,7 @@ def _ppa_kernel(cell, cal, is_sram, node, caps_bytes, banks, rows, cols, acc):
     # -- leakage (org-independent, like CacheModel.leakage_w) --------------
     cells_leak = bits_total * cell_leak * stress_leak
     peri_leak = leak_lin * cap_mb + leak_sqrt * jnp.sqrt(cap_mb)
-    leakage = (cells_leak + peri_leak)[:, :, 0]               # [m, c]
+    leakage = (cells_leak + peri_leak)[..., 0]                # [n, m, c]
 
     return dict(
         read_latency_s=read_lat,
@@ -209,89 +218,114 @@ def _ppa_kernel(cell, cal, is_sram, node, caps_bytes, banks, rows, cols, acc):
         read_energy_j=read_e,
         write_energy_j=write_e,
         leakage_w=leakage,
-        area_mm2=area[:, :, 0],
+        area_mm2=area[..., 0],
     )
 
 
 @dataclasses.dataclass(frozen=True)
 class DesignTable:
-    """Evaluated (tech x capacity x organization) sweep + Algorithm 1."""
+    """Evaluated (node x tech x capacity x organization) sweep + Algorithm 1.
 
+    Every accessor takes an optional ``node``; a single-node table (the
+    common case) resolves it implicitly, a multi-node (DTCO) table requires
+    it — there is no silent default to the first node.
+    """
+
+    nodes: tuple[TechNode, ...]
     mems: tuple[str, ...]
     capacities_bytes: tuple[int, ...]
-    read_latency_s: np.ndarray     # [m, c, o]
-    write_latency_s: np.ndarray    # [m, c, o]
-    read_energy_j: np.ndarray      # [m, c, o]
-    write_energy_j: np.ndarray     # [m, c, o]
-    leakage_w: np.ndarray          # [m, c]
-    area_mm2: np.ndarray           # [m, c]
-    valid: np.ndarray              # [c, o] bool
+    read_latency_s: np.ndarray     # [n, m, c, o]
+    write_latency_s: np.ndarray    # [n, m, c, o]
+    read_energy_j: np.ndarray      # [n, m, c, o]
+    write_energy_j: np.ndarray     # [n, m, c, o]
+    leakage_w: np.ndarray          # [n, m, c]
+    area_mm2: np.ndarray           # [n, m, c]
+    valid: np.ndarray              # [c, o] bool (node/tech-independent)
 
     # -- indexing ----------------------------------------------------------
 
-    def _mc(self, mem: str, capacity_bytes: int) -> tuple[int, int]:
-        return self.mems.index(mem), self.capacities_bytes.index(capacity_bytes)
+    def _node_index(self, node: TechNode | None) -> int:
+        if node is None:
+            if len(self.nodes) == 1:
+                return 0
+            raise ValueError(
+                f"table spans {len(self.nodes)} nodes "
+                f"({', '.join(nd.name for nd in self.nodes)}); pass node=")
+        try:
+            return self.nodes.index(node)
+        except ValueError:
+            raise ValueError(f"node {node.name!r} not in table") from None
 
-    def design(self, mem: str, capacity_bytes: int, org_index: int) -> CacheDesign:
+    def _nmc(self, mem: str, capacity_bytes: int,
+             node: TechNode | None = None) -> tuple[int, int, int]:
+        return (self._node_index(node), self.mems.index(mem),
+                self.capacities_bytes.index(capacity_bytes))
+
+    def design(self, mem: str, capacity_bytes: int, org_index: int,
+               node: TechNode | None = None) -> CacheDesign:
         """Materialize one design point as the scalar-API dataclass."""
-        m, c = self._mc(mem, capacity_bytes)
+        n, m, c = self._nmc(mem, capacity_bytes, node)
         o = org_index
         return CacheDesign(
             mem=mem,
             capacity_bytes=capacity_bytes,
             org=ORGS[o],
-            read_latency_s=float(self.read_latency_s[m, c, o]),
-            write_latency_s=float(self.write_latency_s[m, c, o]),
-            read_energy_j=float(self.read_energy_j[m, c, o]),
-            write_energy_j=float(self.write_energy_j[m, c, o]),
-            leakage_w=float(self.leakage_w[m, c]),
-            area_mm2=float(self.area_mm2[m, c]),
+            read_latency_s=float(self.read_latency_s[n, m, c, o]),
+            write_latency_s=float(self.write_latency_s[n, m, c, o]),
+            read_energy_j=float(self.read_energy_j[n, m, c, o]),
+            write_energy_j=float(self.write_energy_j[n, m, c, o]),
+            leakage_w=float(self.leakage_w[n, m, c]),
+            area_mm2=float(self.area_mm2[n, m, c]),
         )
 
-    def designs(self, mem: str, capacity_bytes: int) -> list[CacheDesign]:
+    def designs(self, mem: str, capacity_bytes: int,
+                node: TechNode | None = None) -> list[CacheDesign]:
         """All valid design points, in scalar design_space order."""
-        _, c = self._mc(mem, capacity_bytes)
-        return [self.design(mem, capacity_bytes, o)
+        _, _, c = self._nmc(mem, capacity_bytes, node)
+        return [self.design(mem, capacity_bytes, o, node=node)
                 for o in np.flatnonzero(self.valid[c])]
 
     # -- Algorithm 1 -------------------------------------------------------
 
-    def edap(self, mem: str, capacity_bytes: int) -> np.ndarray:
+    def edap(self, mem: str, capacity_bytes: int,
+             node: TechNode | None = None) -> np.ndarray:
         """[o] EDAP vector (scalar CacheDesign.edap operation order)."""
-        m, c = self._mc(mem, capacity_bytes)
-        e = 0.5 * (self.read_energy_j[m, c] + self.write_energy_j[m, c])
-        d = 0.5 * (self.read_latency_s[m, c] + self.write_latency_s[m, c])
-        return e * d * self.area_mm2[m, c]
+        n, m, c = self._nmc(mem, capacity_bytes, node)
+        e = 0.5 * (self.read_energy_j[n, m, c] + self.write_energy_j[n, m, c])
+        d = 0.5 * (self.read_latency_s[n, m, c]
+                   + self.write_latency_s[n, m, c])
+        return e * d * self.area_mm2[n, m, c]
 
     @functools.cached_property
-    def _tuned_memo(self) -> dict[tuple[str, int], int]:
+    def _tuned_memo(self) -> dict[tuple[int, str, int], int]:
         # per-instance winner cache: every consumer (isocap/isoarea/scaling/
-        # benchmarks) re-queries the same few (mem, capacity) pairs
+        # dtco/benchmarks) re-queries the same few (node, mem, capacity)
         return {}
 
-    def tuned_index(self, mem: str, capacity_bytes: int) -> int:
+    def tuned_index(self, mem: str, capacity_bytes: int,
+                    node: TechNode | None = None) -> int:
         """Algorithm 1: masked argmin per (target, access) -> min-EDAP nominee.
 
         Matches tuner's scalar loop exactly: the OPT_TARGETS metric order,
         the ACCESS_TYPES pool order, first-occurrence argmin within each
         pool, and strict-< EDAP tie-breaking across nominees.  Memoized per
-        (mem, capacity) on the table instance.
+        (node, mem, capacity) on the table instance.
         """
+        n, m, c = self._nmc(mem, capacity_bytes, node)
         memo = self._tuned_memo
-        if (mem, capacity_bytes) in memo:
-            return memo[mem, capacity_bytes]
-        m, c = self._mc(mem, capacity_bytes)
+        if (n, mem, capacity_bytes) in memo:
+            return memo[n, mem, capacity_bytes]
         if not self.valid[c].any():
             raise ValueError(
                 f"empty design space at {capacity_bytes} bytes")
-        rl = self.read_latency_s[m, c]
-        wl = self.write_latency_s[m, c]
-        re_ = self.read_energy_j[m, c]
-        we_ = self.write_energy_j[m, c]
-        flat = np.full(N_ORGS, self.area_mm2[m, c])
-        leak = np.full(N_ORGS, self.leakage_w[m, c])
+        rl = self.read_latency_s[n, m, c]
+        wl = self.write_latency_s[n, m, c]
+        re_ = self.read_energy_j[n, m, c]
+        we_ = self.write_energy_j[n, m, c]
+        flat = np.full(N_ORGS, self.area_mm2[n, m, c])
+        leak = np.full(N_ORGS, self.leakage_w[n, m, c])
         metrics = (rl, wl, re_, we_, rl * re_, wl * we_, flat, leak)
-        edap = self.edap(mem, capacity_bytes)
+        edap = self.edap(mem, capacity_bytes, node)
         best = -1
         for metric in metrics:
             for a in range(len(ACCESS_TYPES)):
@@ -301,44 +335,73 @@ class DesignTable:
                 nominee = int(np.argmin(np.where(pool, metric, np.inf)))
                 if best < 0 or edap[nominee] < edap[best]:
                     best = nominee
-        memo[mem, capacity_bytes] = best
+        memo[n, mem, capacity_bytes] = best
         return best
 
-    def tuned(self, mem: str, capacity_bytes: int) -> CacheDesign:
+    def tuned(self, mem: str, capacity_bytes: int,
+              node: TechNode | None = None) -> CacheDesign:
         return self.design(mem, capacity_bytes,
-                           self.tuned_index(mem, capacity_bytes))
+                           self.tuned_index(mem, capacity_bytes, node),
+                           node=node)
 
     # -- vectorized feasibility (iso-area) ---------------------------------
 
-    def areas(self, mem: str) -> np.ndarray:
+    def areas(self, mem: str, node: TechNode | None = None) -> np.ndarray:
         """[c] area vector — org-independent, so no tuning required."""
-        return self.area_mm2[self.mems.index(mem)]
+        return self.area_mm2[self._node_index(node), self.mems.index(mem)]
 
 
-def _tech_matrices(mems, cells, cals, node):
+def _as_nodes(nodes) -> tuple[TechNode, ...]:
+    """Normalize a single TechNode or a sequence of them to a tuple."""
+    return (nodes,) if isinstance(nodes, TechNode) else tuple(nodes)
+
+
+def _per_node(seq, n_nodes: int, what: str):
+    """Normalize explicit cells/cals to a per-node nested tuple: a flat
+    per-mem sequence is accepted for single-node sweeps (the tuner and the
+    calibration fixed point pass trial values that way)."""
+    seq = tuple(seq)
+    if seq and not isinstance(seq[0], (tuple, list)):
+        seq = (seq,)
+    if len(seq) != n_nodes:
+        raise ValueError(f"{what} must be given per node "
+                         f"({len(seq)} rows for {n_nodes} nodes)")
+    return tuple(tuple(row) for row in seq)
+
+
+def _tech_matrices(mems, cells, cals, nodes):
     if cells is None:
-        cells = tuple(bitcell_mod.characterize(m, node) for m in mems)
+        cells = tuple(tuple(bitcell_mod.characterize(m, nd) for m in mems)
+                      for nd in nodes)
+    else:
+        cells = _per_node(cells, len(nodes), "cells")
     if cals is None:
         from repro.core import calibration  # deferred: get() calls back here
-        cals = tuple(calibration.get(m) for m in mems)
-    cell_mat = np.stack([c.as_array() for c in cells])
-    cal_mat = np.array([[getattr(cal, f) for f in CAL_FIELDS] for cal in cals],
-                       dtype=np.float64)
+        cals = tuple(tuple(calibration.get(m, nd) for m in mems)
+                     for nd in nodes)
+    else:
+        cals = _per_node(cals, len(nodes), "cals")
+    cell_mat = np.stack([np.stack([c.as_array() for c in row])
+                         for row in cells])
+    cal_mat = np.array([[[getattr(cal, f) for f in CAL_FIELDS]
+                         for cal in row] for row in cals], dtype=np.float64)
     is_sram = np.array([m == "sram" for m in mems])
-    node_vec = np.array([getattr(node, f) for f in NODE_FIELDS],
-                        dtype=np.float64)
-    return cell_mat, cal_mat, is_sram, node_vec
+    node_mat = np.array([[getattr(nd, f) for f in NODE_FIELDS]
+                         for nd in nodes], dtype=np.float64)
+    return cell_mat, cal_mat, is_sram, node_mat
 
 
 def evaluate(capacities_bytes, orgs, mems=MEMS, cells=None, cals=None,
-             node: TechNode = TECH_16NM) -> dict[str, np.ndarray]:
+             nodes: TechNode | tuple[TechNode, ...] = TECH_16NM,
+             ) -> dict[str, np.ndarray]:
     """Raw batched evaluation over an arbitrary organization list.
 
-    Returns the PPA tensors keyed like CacheDesign fields: [m, c, o] for
-    the org-dependent quantities, [m, c] for leakage/area.  ``orgs`` may be
-    any sequence of CacheOrg (not just the standard grid) — this is what
+    Returns the PPA tensors keyed like CacheDesign fields: [n, m, c, o] for
+    the org-dependent quantities, [n, m, c] for leakage/area.  ``orgs`` may
+    be any sequence of CacheOrg (not just the standard grid) — this is what
     makes the scalar ``CacheModel.evaluate`` a one-element batch.
     """
+    nodes = _as_nodes(nodes)
     mems = tuple(mems)
     caps_arr = np.array([int(c) for c in capacities_bytes], dtype=np.int64)
     banks = np.array([o.banks for o in orgs], dtype=np.int64)
@@ -346,32 +409,34 @@ def evaluate(capacities_bytes, orgs, mems=MEMS, cells=None, cals=None,
     cols = np.array([o.cols for o in orgs], dtype=np.int64)
     acc = np.array([ACCESS_TYPES.index(o.access) for o in orgs],
                    dtype=np.int64)
-    cell_mat, cal_mat, is_sram, node_vec = _tech_matrices(
-        mems, cells, cals, node)
+    cell_mat, cal_mat, is_sram, node_mat = _tech_matrices(
+        mems, cells, cals, nodes)
     with enable_x64():
-        out = _ppa_kernel(cell_mat, cal_mat, is_sram, node_vec, caps_arr,
+        out = _ppa_kernel(cell_mat, cal_mat, is_sram, node_mat, caps_arr,
                           banks, rows, cols, acc)
     return {k: np.asarray(v) for k, v in out.items()}
 
 
 def sweep(capacities_bytes, mems=MEMS, cells=None, cals=None,
-          node: TechNode = TECH_16NM) -> DesignTable:
-    """Evaluate the full (mems x capacities x orgs) cross product.
+          nodes: TechNode | tuple[TechNode, ...] = TECH_16NM) -> DesignTable:
+    """Evaluate the full (nodes x mems x capacities x orgs) cross product.
 
     ``cells``/``cals`` default to the characterized bitcell and fitted
-    calibration per technology; the calibration fixed point passes trial
-    values explicitly (which is why this function must not call
+    calibration per (node, technology); the calibration fixed point passes
+    trial values explicitly (which is why this function must not call
     calibration.get itself).
     """
+    nodes = _as_nodes(nodes)
     mems = tuple(mems)
     caps = tuple(int(c) for c in capacities_bytes)
-    cell_mat, cal_mat, is_sram, node_vec = _tech_matrices(
-        mems, cells, cals, node)
+    cell_mat, cal_mat, is_sram, node_mat = _tech_matrices(
+        mems, cells, cals, nodes)
     caps_arr = np.array(caps, dtype=np.int64)
     with enable_x64():
-        out = _ppa_kernel(cell_mat, cal_mat, is_sram, node_vec, caps_arr,
+        out = _ppa_kernel(cell_mat, cal_mat, is_sram, node_mat, caps_arr,
                           ORG_BANKS, ORG_ROWS, ORG_COLS, ORG_ACCESS)
     return DesignTable(
+        nodes=nodes,
         mems=mems,
         capacities_bytes=caps,
         read_latency_s=np.asarray(out["read_latency_s"]),
@@ -385,8 +450,25 @@ def sweep(capacities_bytes, mems=MEMS, cells=None, cals=None,
 
 
 @functools.lru_cache(maxsize=None)
+def _design_table_cached(nodes: tuple[TechNode, ...],
+                         mems: tuple[str, ...],
+                         capacities_bytes: tuple[int, ...]) -> DesignTable:
+    return sweep(capacities_bytes, mems=mems, nodes=nodes)
+
+
 def design_table(mems: tuple[str, ...],
-                 capacities_bytes: tuple[int, ...]) -> DesignTable:
+                 capacities_bytes: tuple[int, ...],
+                 nodes: TechNode | tuple[TechNode, ...] = TECH_16NM,
+                 ) -> DesignTable:
     """Memoized fully-calibrated table — the shared sweep every consumer
-    (tuner, isocap, isoarea, scaling, benchmarks) reads from."""
-    return sweep(capacities_bytes, mems=mems)
+    (tuner, isocap, isoarea, scaling, dtco, benchmarks) reads from.
+
+    The memo key is (nodes, mems, capacities): a non-default node gets its
+    own table (it used to silently share the 16 nm entry — the memo-key
+    bug this signature fixes)."""
+    return _design_table_cached(_as_nodes(nodes), tuple(mems),
+                                tuple(int(c) for c in capacities_bytes))
+
+
+design_table.cache_clear = _design_table_cached.cache_clear
+design_table.cache_info = _design_table_cached.cache_info

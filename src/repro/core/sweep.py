@@ -9,8 +9,9 @@ axes of an analysis
 
     scenarios  (workload, batch, training) TrafficStats — paper CNNs,
                batch sweeps, or LM (arch x shape) cells (repro.scenarios)
-    designs    (memory technology, capacity) points, with a normalization
-               group per point (the paper's "normalize to SRAM" baseline)
+    designs    (memory technology, capacity, technology node) points, with
+               a normalization group per point (the paper's "normalize to
+               SRAM" baseline; cross-node DTCO sweeps group per node)
     platforms  compute platforms (GTX_1080TI, TPU_V5E, ...)
 
 and ``run`` lowers it to **exactly one** circuit-engine call
@@ -40,7 +41,7 @@ import numpy as np
 
 from repro.core import engine, report, workload_engine
 from repro.core.cachemodel import CacheDesign
-from repro.core.tech import Platform, GTX_1080TI
+from repro.core.tech import Platform, GTX_1080TI, TechNode, TECH_16NM
 from repro.core.traffic import TrafficStats
 from repro.core.workloads import Workload
 
@@ -61,16 +62,19 @@ _ROW_FIELD = {"dyn": "dyn_j", "leak": "leak_j", "energy": "energy_j",
 
 @dataclasses.dataclass(frozen=True)
 class DesignPoint:
-    """One (memory technology, capacity) point of the design axis.
+    """One (memory technology, capacity, node) point of the design axis.
 
     ``group`` labels the normalization group: each group holds exactly one
     baseline-memory design, and ``norm_to`` divides every member by it
-    (iso-capacity/iso-area: one group; scaling: one group per capacity).
+    (iso-capacity/iso-area: one group; scaling: one group per capacity;
+    DTCO: one group per (node, capacity), so every node is compared against
+    its own baseline).
     """
 
     mem: str
     capacity_bytes: int
     group: object = 0
+    node: TechNode = TECH_16NM
 
     @property
     def capacity_mb(self) -> float:
@@ -79,11 +83,18 @@ class DesignPoint:
 
 def design_grid(mems: Sequence[str] = MEMS,
                 capacities_mb: Sequence[float] = (3,),
+                nodes: TechNode | Sequence[TechNode] = (TECH_16NM,),
                 ) -> tuple[DesignPoint, ...]:
-    """Capacity-major (capacity x memory) cross product, one normalization
-    group per capacity — the iso-capacity and scaling design axes."""
-    return tuple(DesignPoint(m, int(c * 2**20), group=float(c))
-                 for c in capacities_mb for m in mems)
+    """Node-major (node x capacity x memory) cross product, one
+    normalization group per (node, capacity) — the iso-capacity, scaling,
+    and cross-node DTCO design axes.  Single-node grids keep the bare
+    per-capacity group labels (the historical row shape)."""
+    nodes = (nodes,) if isinstance(nodes, TechNode) else tuple(nodes)
+    single = len(nodes) == 1
+    return tuple(DesignPoint(m, int(c * 2**20),
+                             group=float(c) if single else (nd.name, float(c)),
+                             node=nd)
+                 for nd in nodes for c in capacities_mb for m in mems)
 
 
 def design_corners(points: Sequence[tuple[str, float]],
@@ -141,13 +152,15 @@ class SweepSpec:
 
 def lower_designs(points: Sequence[DesignPoint],
                   ) -> tuple[engine.DesignTable, tuple[CacheDesign, ...]]:
-    """One memoized ``engine.design_table`` over the unique mems and
-    capacities, then the EDAP-tuned design of every point (Algorithm 1,
-    memoized per (mem, capacity) on the table)."""
+    """One memoized ``engine.design_table`` over the unique nodes, mems,
+    and capacities, then the EDAP-tuned design of every point (Algorithm 1,
+    memoized per (node, mem, capacity) on the table)."""
+    nodes = tuple(dict.fromkeys(p.node for p in points))
     mems = tuple(dict.fromkeys(p.mem for p in points))
     caps = tuple(dict.fromkeys(p.capacity_bytes for p in points))
-    table = engine.design_table(mems, caps)
-    return table, tuple(table.tuned(p.mem, p.capacity_bytes) for p in points)
+    table = engine.design_table(mems, caps, nodes=nodes)
+    return table, tuple(table.tuned(p.mem, p.capacity_bytes, node=p.node)
+                        for p in points)
 
 
 @functools.lru_cache(maxsize=None)
@@ -199,9 +212,10 @@ class SweepResult:
         return self.tables[0].scenarios
 
     @property
-    def design_labels(self) -> tuple[tuple[str, float], ...]:
-        """(mem, capacity_mb) per design column."""
-        return tuple((p.mem, p.capacity_mb) for p in self.spec.designs)
+    def design_labels(self) -> tuple[tuple[str, float, str], ...]:
+        """(mem, capacity_mb, node_name) per design column."""
+        return tuple((p.mem, p.capacity_mb, p.node.name)
+                     for p in self.spec.designs)
 
     @property
     def platform_labels(self) -> tuple[str, ...]:
@@ -213,14 +227,19 @@ class SweepResult:
                 "scenario": self.scenario_labels,
                 "design": self.design_labels}
 
-    def design_index(self, mem: str, capacity_mb: float | None = None) -> int:
+    def design_index(self, mem: str, capacity_mb: float | None = None,
+                     node: TechNode | str | None = None) -> int:
+        node_name = node.name if isinstance(node, TechNode) else node
         matches = [j for j, p in enumerate(self.spec.designs)
                    if p.mem == mem
-                   and capacity_mb in (None, p.capacity_mb)]
+                   and capacity_mb in (None, p.capacity_mb)
+                   and node_name in (None, p.node.name)]
         if not matches:
-            raise ValueError(f"no design ({mem}, {capacity_mb}) in sweep")
+            raise ValueError(
+                f"no design ({mem}, {capacity_mb}, {node_name}) in sweep")
         if len(matches) > 1:
-            raise ValueError(f"ambiguous design ({mem}, {capacity_mb})")
+            raise ValueError(
+                f"ambiguous design ({mem}, {capacity_mb}, {node_name})")
         return matches[0]
 
     # -- metric tensors ----------------------------------------------------
@@ -282,6 +301,7 @@ class SweepResult:
                                stage="train" if training else "infer",
                                mem=point.mem,
                                capacity_mb=point.capacity_mb,
+                               node=point.node.name,
                                group=point.group)
                     row.update({_ROW_FIELD[k]: float(v[pi, si, di])
                                 for k, v in m.items()})

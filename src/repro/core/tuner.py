@@ -26,6 +26,7 @@ from repro.core import engine
 from repro.core.cachemodel import ASSOC  # noqa: F401  (re-export convenience)
 from repro.core.cachemodel import ACCESS_TYPES, CacheDesign, CacheModel
 from repro.core.calibration import ISO_AREA_TOLERANCE
+from repro.core.tech import TechNode, TECH_16NM
 
 # NVSim optimization targets (paper Algorithm 1's set O).  The batched
 # selection (engine.DesignTable.tuned_index) follows this exact order.
@@ -50,7 +51,7 @@ def tune(model: CacheModel, capacity_bytes: int) -> CacheDesign:
     """
     table = engine.sweep((capacity_bytes,), mems=(model.mem,),
                          cells=(model.cell,), cals=(model.cal,),
-                         node=model.node)
+                         nodes=model.node)
     return table.tuned(model.mem, capacity_bytes)
 
 
@@ -71,19 +72,22 @@ def tune_loop(model: CacheModel, capacity_bytes: int) -> CacheDesign:
 
 
 @functools.lru_cache(maxsize=None)
-def _tuned_design_cached(mem: str, capacity_bytes: int) -> CacheDesign:
-    table = engine.design_table((mem,), (capacity_bytes,))
+def _tuned_design_cached(mem: str, capacity_bytes: int,
+                         node: TechNode) -> CacheDesign:
+    table = engine.design_table((mem,), (capacity_bytes,), nodes=(node,))
     return table.tuned(mem, capacity_bytes)
 
 
-def tuned_design(mem: str, capacity_mb: float) -> CacheDesign:
+def tuned_design(mem: str, capacity_mb: float,
+                 node: TechNode = TECH_16NM) -> CacheDesign:
     """Convenience: EDAP-tuned design for `mem` at `capacity_mb` (memoized:
-    every caller of the same (mem, capacity) shares one tuned sweep)."""
-    return _tuned_design_cached(mem, int(capacity_mb * 2**20))
+    every caller of the same (mem, capacity, node) shares one tuned sweep)."""
+    return _tuned_design_cached(mem, int(capacity_mb * 2**20), node)
 
 
 def iso_area_capacity(mem: str, sram_capacity_mb: float = 3.0,
-                      search_mb: Iterable[int] = range(1, 65)) -> int:
+                      search_mb: Iterable[int] = range(1, 65),
+                      node: TechNode = TECH_16NM) -> int:
     """Largest (integer-MB) capacity of `mem` fitting the SRAM area budget.
 
     Paper §III-B scenario (ii): reuse the SRAM cache's area for a larger
@@ -91,12 +95,14 @@ def iso_area_capacity(mem: str, sram_capacity_mb: float = 3.0,
     5.53 mm^2 SRAM (+2%), so the budget is 1.02x the SRAM area.
 
     Area is organization-independent, so feasibility is one vectorized mask
-    over the engine's area row — no per-capacity tuning.
+    over the engine's area row — no per-capacity tuning.  Both the SRAM
+    budget and the search run at `node`.
     """
-    budget = tuned_design("sram", sram_capacity_mb).area_mm2 * ISO_AREA_TOLERANCE
+    budget = tuned_design("sram", sram_capacity_mb, node).area_mm2 \
+        * ISO_AREA_TOLERANCE
     search = tuple(search_mb)
     caps_bytes = tuple(mb * 2**20 for mb in search)
-    areas = engine.design_table((mem,), caps_bytes).areas(mem)
+    areas = engine.design_table((mem,), caps_bytes, nodes=(node,)).areas(mem)
     feasible = np.asarray(search)[areas <= budget]
     if feasible.size == 0:
         raise ValueError(f"no iso-area capacity for {mem}")

@@ -237,9 +237,15 @@ class WorkloadTable:
                    and capacity_bytes in (None, d.capacity_bytes)]
         if not matches:
             raise ValueError(f"no design ({mem}, {capacity_bytes}) in table")
-        if len(matches) > 1 and capacity_bytes is None:
-            raise ValueError(
-                f"{mem!r} appears at several capacities; pass capacity_bytes")
+        if len(matches) > 1:
+            if capacity_bytes is None:
+                raise ValueError(f"{mem!r} appears at several capacities; "
+                                 "pass capacity_bytes")
+            # duplicate (mem, capacity) designs — e.g. the same corner at
+            # two technology nodes — cannot be told apart here; never
+            # silently return the first (SweepResult.design_index parity)
+            raise ValueError(f"several designs match ({mem}, "
+                             f"{capacity_bytes}); look them up by index")
         return matches[0]
 
     @property

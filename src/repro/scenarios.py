@@ -24,7 +24,7 @@ from collections.abc import Sequence
 import repro.configs as configs
 from repro.configs.base import SHAPES
 from repro.core import sweep
-from repro.core.tech import Platform, TPU_V5E
+from repro.core.tech import Platform, TechNode, TECH_16NM, TPU_V5E
 from repro.core.traffic import INF, AccessStream, TrafficStats
 from repro.launch import flops as flops_mod
 
@@ -90,12 +90,15 @@ def lm_sweep_spec(capacity_mb: float = LM_CAPACITY_MB,
                   platforms: Sequence[Platform] = (TPU_V5E,),
                   archs: Sequence[str] | None = None,
                   shapes: Sequence[str] = LM_SHAPES,
+                  nodes: TechNode | Sequence[TechNode] = (TECH_16NM,),
                   name: str = "lm-nvm") -> sweep.SweepSpec:
     """The LM study as one declarative sweep: every supported (arch x
-    shape) cell x every memory at the TPU-class buffer capacity x the
-    requested platforms."""
+    shape) cell x every (node x memory) design at the TPU-class buffer
+    capacity x the requested platforms.  ``nodes`` is the cross-node DTCO
+    entry point: several nodes batch through the same single circuit-call
+    + single fold-call pipeline, each normalized to its own-node SRAM."""
     return sweep.SweepSpec(
         name=name,
         scenarios=lm_scenarios(archs, shapes),
-        designs=sweep.design_grid(mems, (capacity_mb,)),
+        designs=sweep.design_grid(mems, (capacity_mb,), nodes=nodes),
         platforms=tuple(platforms))

@@ -1,0 +1,215 @@
+"""Tests for the technology-node axis: scaled-node projections, the
+calibration derivation rule, and the cross-node DTCO analysis.
+
+Three families:
+
+  scaling      tech.scaled_node reproduces the anchor at s=1, applies the
+               documented exponents, and round-trips (the property the
+               calibration derivation rule keys on);
+  calibration  the 16 nm fixed-point fit is the single anchor, scaled
+               nodes derive from it by the documented rule, and nodes
+               without a rule raise instead of inheriting 16 nm constants;
+  dtco         the cross-node analysis matches the scalar per-node path
+               (CacheModel(mem, node=...) + traffic.energy) and shows the
+               monotone SRAM-leakage / widening-gap trend it exists to
+               surface.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core import calibration, dtco, sweep, tech, traffic, tuner
+from repro.core.cachemodel import CacheModel
+from repro.core.isocap import INFER_BATCH, TRAIN_BATCH, MEMS
+from repro.core.tech import (TECH_16NM, TECH_12NM, TECH_10NM, TECH_7NM,
+                             TechNode, scaled_node)
+from repro.core.workloads import paper_workloads
+
+REL = 1e-12
+
+
+# ---------------------------------------------------------------------------
+# scaled_node
+# ---------------------------------------------------------------------------
+
+
+def test_scaled_node_identity_at_anchor_size():
+    n = scaled_node(16e-9)
+    for f in tech.SCALING_EXPONENTS:
+        assert getattr(n, f) == getattr(TECH_16NM, f), f
+    assert n.feature_size_m == TECH_16NM.feature_size_m
+
+
+def test_scaled_node_applies_documented_exponents():
+    n = scaled_node(8e-9)
+    s = 0.5
+    for f, e in tech.SCALING_EXPONENTS.items():
+        assert getattr(n, f) == pytest.approx(
+            getattr(TECH_16NM, f) * s ** e, rel=REL), f
+
+
+def test_scaled_node_directions():
+    """The physics directions behind the DTCO trend: smaller nodes mean
+    smaller cells, lower vdd, and a leakier 6T storage cell."""
+    for smaller, larger in ((TECH_7NM, TECH_10NM), (TECH_10NM, TECH_12NM),
+                            (TECH_12NM, TECH_16NM)):
+        assert smaller.sram_cell_area_um2 < larger.sram_cell_area_um2
+        assert smaller.vdd < larger.vdd
+        assert smaller.sram_cell_leak_w > larger.sram_cell_leak_w
+
+
+def test_scaled_node_round_trips():
+    for node in (TECH_12NM, TECH_10NM, TECH_7NM):
+        assert scaled_node(node.feature_size_m, name=node.name) == node
+
+
+# ---------------------------------------------------------------------------
+# calibration derivation rule
+# ---------------------------------------------------------------------------
+
+
+def test_calibration_anchor_is_default():
+    assert calibration.get("stt") == calibration.get("stt", TECH_16NM)
+
+
+def test_calibration_scaled_node_rule():
+    anchor = calibration.get("sot")
+    derived = calibration.get("sot", TECH_7NM)
+    s = tech.scale_factor(TECH_7NM)
+    assert derived.peri_area_lin == pytest.approx(
+        anchor.peri_area_lin * s ** tech.PERI_AREA_EXP, rel=REL)
+    assert derived.peri_area_sqrt == pytest.approx(
+        anchor.peri_area_sqrt * s ** tech.PERI_AREA_EXP, rel=REL)
+    assert derived.leak_lin == pytest.approx(
+        anchor.leak_lin * s ** tech.PERI_LEAK_EXP, rel=REL)
+    assert derived.leak_sqrt == pytest.approx(
+        anchor.leak_sqrt * s ** tech.PERI_LEAK_EXP, rel=REL)
+    # dimensionless multipliers transfer unchanged (the structural model
+    # they multiply reads the node parameters itself)
+    for k in ("k_read_lat", "k_write_lat", "k_read_e", "k_write_e"):
+        assert getattr(derived, k) == getattr(anchor, k), k
+
+
+def test_calibration_raises_without_derivation_rule():
+    handmade = TechNode(name="mystery-5nm", feature_size_m=5e-9)
+    with pytest.raises(ValueError, match="no calibration derivation rule"):
+        calibration.get("sram", handmade)
+    # a scaled_node with a custom name still round-trips -> still has a rule
+    assert calibration.get("sram", scaled_node(5e-9, name="my-5nm"))
+
+
+def test_sram_bitcell_reads_node_leakage():
+    from repro.core import bitcell
+    assert bitcell.sram_bitcell(TECH_16NM).cell_leakage_w == \
+        TECH_16NM.sram_cell_leak_w == 2.143e-7
+    assert bitcell.sram_bitcell(TECH_7NM).cell_leakage_w == \
+        TECH_7NM.sram_cell_leak_w > TECH_16NM.sram_cell_leak_w
+
+
+# ---------------------------------------------------------------------------
+# cross-node DTCO analysis
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_dtco():
+    workloads = dict(list(paper_workloads().items())[:2])
+    nodes = (TECH_16NM, TECH_7NM)
+    return workloads, nodes, dtco.analyze(workloads=workloads, nodes=nodes)
+
+
+def test_dtco_rows_match_scalar_per_node_path(small_dtco):
+    """Every DTCO cell equals the pre-batched scalar study: a per-node
+    CacheModel tune + per-(workload, stage) traffic.energy fold."""
+    workloads, nodes, rows = small_dtco
+    stages = ((False, INFER_BATCH), (True, TRAIN_BATCH))
+    it = iter(rows)
+    for node in nodes:
+        designs = {m: tuner.tune_loop(CacheModel(m, node=node), 3 * 2**20)
+                   for m in MEMS}
+        reps = {(n, m, t): traffic.energy(
+                    traffic.build(w, b, t), designs[m])
+                for n, w in workloads.items()
+                for t, b in stages for m in MEMS}
+
+        def mean(fn, mem, base="sram"):
+            vals = [fn(reps[n, mem, t]) / fn(reps[n, base, t])
+                    for n in workloads for t, _ in stages]
+            return sum(vals) / len(vals)
+
+        for mem in MEMS:
+            row = next(it)
+            assert (row.node, row.mem) == (node.name, mem)
+            assert row.leakage_w == pytest.approx(
+                designs[mem].leakage_w, rel=REL)
+            assert row.area_mm2 == pytest.approx(
+                designs[mem].area_mm2, rel=REL)
+            assert row.energy_x == pytest.approx(
+                mean(lambda r: r.total_j(False), mem), rel=REL)
+            assert row.leak_x == pytest.approx(
+                mean(lambda r: r.leak_j, mem), rel=REL)
+            assert row.edp_x == pytest.approx(
+                mean(lambda r: r.edp(True), mem), rel=REL)
+            assert row.runtime_x == pytest.approx(
+                mean(lambda r: r.runtime_s, mem), rel=REL)
+    assert next(it, None) is None
+
+
+def test_dtco_trend_sram_leakage_blowup():
+    """The headline DTCO claim: SRAM leakage grows monotonically as the
+    node shrinks while both MRAM flavors' leakage gap widens."""
+    rows = dtco.analyze(
+        workloads=dict(list(paper_workloads().items())[:1]))
+    leak = {(r.node, r.mem): r for r in rows}
+    names = [n.name for n in dtco.NODES]
+    sram_w = [leak[n, "sram"].leakage_w for n in names]
+    assert sram_w == sorted(sram_w), "SRAM leakage must grow 16nm -> 7nm"
+    for mem in ("stt", "sot"):
+        gap = [1.0 / leak[n, mem].leak_x for n in names]
+        assert gap == sorted(gap), f"{mem} leakage gap must widen"
+        edp_red = [1.0 / leak[n, mem].edp_x for n in names]
+        assert edp_red[-1] > edp_red[0], f"{mem} EDP gap must widen"
+
+
+def test_dtco_normalizes_per_node(small_dtco):
+    """Each node's SRAM is its own baseline (never the 16 nm one)."""
+    _, _, rows = small_dtco
+    for r in rows:
+        if r.mem == "sram":
+            for f in ("energy_x", "leak_x", "edp_x", "runtime_x"):
+                assert getattr(r, f) == pytest.approx(1.0, rel=1e-12)
+
+
+def test_design_grid_node_groups():
+    grid = sweep.design_grid(MEMS, (2, 3), nodes=(TECH_16NM, TECH_7NM))
+    assert len(grid) == 2 * 2 * len(MEMS)
+    groups = {p.group for p in grid}
+    assert groups == {(n.name, float(c)) for n in (TECH_16NM, TECH_7NM)
+                      for c in (2, 3)}
+    for g in groups:
+        assert sum(p.group == g and p.mem == "sram" for p in grid) == 1
+    # single-node grids keep the historical bare-capacity group labels
+    assert {p.group for p in sweep.design_grid(MEMS, (2, 3))} == {2.0, 3.0}
+
+
+def test_lm_sweep_spec_node_axis():
+    from repro import scenarios
+    spec = scenarios.lm_sweep_spec(archs=("tinyllama-1.1b",),
+                                   shapes=("decode_32k",),
+                                   nodes=(TECH_16NM, TECH_10NM),
+                                   name="lm-dtco-test")
+    assert len(spec.designs) == 2 * len(sweep.MEMS)
+    assert {p.node.name for p in spec.designs} == \
+        {TECH_16NM.name, TECH_10NM.name}
+
+
+def test_fig_dtco_benchmark_quick():
+    from benchmarks import fig_dtco
+    out = fig_dtco.run(quick=True)
+    assert "sram_leak" in out["derived"]
+    assert len(out["rows"]) == 2 * len(MEMS)
+    assert {r["node"] for r in out["rows"]} == \
+        {TECH_16NM.name, TECH_7NM.name}
+    assert all(dataclasses.asdict(dtco.DTCORow(**{
+        k: r[k] for k in r})) == r for r in out["rows"])

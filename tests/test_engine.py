@@ -11,6 +11,7 @@ import pytest
 
 from repro.core import engine, tuner
 from repro.core.cachemodel import ACCESS_TYPES, CacheModel, CacheOrg
+from repro.core.tech import TECH_16NM, TECH_7NM, TECH_10NM
 
 MEMS = ("sram", "stt", "sot")
 REL = 1e-12  # float64 agreement between the scalar and batched paths
@@ -128,3 +129,85 @@ def test_empty_design_space_raises():
     assert not tiny.valid.any()
     with pytest.raises(ValueError):
         tiny.tuned("stt", 512)
+
+
+# ---------------------------------------------------------------------------
+# The batched TechNode axis
+# ---------------------------------------------------------------------------
+
+
+def test_design_table_memo_keyed_by_node():
+    """Regression: the memo key includes the node(s).  Before the fix a
+    non-default node silently shared the 16 nm entry."""
+    cap = 3 * 2**20
+    t16 = engine.design_table(("sram",), (cap,))
+    t7 = engine.design_table(("sram",), (cap,), nodes=(TECH_7NM,))
+    assert t16 is not t7
+    # different nodes must return genuinely different tables
+    assert float(t7.leakage_w[0, 0, 0]) != \
+        pytest.approx(float(t16.leakage_w[0, 0, 0]), rel=1e-3)
+    assert float(t7.area_mm2[0, 0, 0]) < float(t16.area_mm2[0, 0, 0])
+    # a bare TechNode and a 1-tuple normalize to the same memo entry
+    assert engine.design_table(("sram",), (cap,), nodes=TECH_7NM) is t7
+    assert engine.design_table(("sram",), (cap,), nodes=(TECH_16NM,)) is t16
+
+
+@pytest.mark.parametrize("mem", MEMS)
+def test_node_axis_matches_scalar(mem):
+    """One table spanning 2 nodes x 3 mems x a capacity grid, pinned per
+    node to the scalar CacheModel(mem, node=...) path (<= 1e-12)."""
+    caps = tuple(c * 2**20 for c in (1, 3, 8))
+    nodes = (TECH_16NM, TECH_7NM)
+    table = engine.design_table(MEMS, caps, nodes=nodes)
+    for node in nodes:
+        model = CacheModel(mem, node=node)
+        for ci, cap in enumerate(caps):
+            for o in np.flatnonzero(table.valid[ci])[::29]:
+                b = table.design(mem, cap, int(o), node=node)
+                s = model.evaluate_scalar(cap, engine.ORGS[o])
+                for q in QUANTITIES:
+                    assert getattr(b, q) == pytest.approx(
+                        getattr(s, q), rel=REL), (node.name, mem, cap, q)
+
+
+@pytest.mark.parametrize("node", [TECH_7NM, TECH_10NM],
+                         ids=lambda n: n.name)
+def test_node_axis_tuned_matches_scalar_loop(node):
+    """Algorithm 1 winners at a non-default node match the scalar loop."""
+    cap = 3 * 2**20
+    table = engine.design_table(MEMS, (cap,), nodes=(TECH_16NM, node))
+    for mem in MEMS:
+        batched = table.tuned(mem, cap, node=node)
+        loop = tuner.tune_loop(CacheModel(mem, node=node), cap)
+        assert batched.org == loop.org
+        for q in QUANTITIES:
+            assert getattr(batched, q) == pytest.approx(
+                getattr(loop, q), rel=REL), (node.name, mem, q)
+
+
+def test_multi_node_consistent_with_single_node_tables():
+    """The node batch shape must not change values: [2, m, c, o] equals
+    the stacked single-node tables."""
+    cap = 3 * 2**20
+    multi = engine.design_table(MEMS, (cap,), nodes=(TECH_16NM, TECH_7NM))
+    for node in (TECH_16NM, TECH_7NM):
+        single = engine.design_table(MEMS, (cap,), nodes=(node,))
+        for mem in MEMS:
+            a = multi.tuned(mem, cap, node=node)
+            b = single.tuned(mem, cap)
+            assert a.org == b.org
+            for q in QUANTITIES:
+                assert getattr(a, q) == pytest.approx(getattr(b, q), rel=REL)
+
+
+def test_multi_node_table_requires_node():
+    cap = 3 * 2**20
+    table = engine.design_table(("stt",), (cap,),
+                                nodes=(TECH_16NM, TECH_7NM))
+    with pytest.raises(ValueError, match="pass node"):
+        table.tuned("stt", cap)
+    with pytest.raises(ValueError, match="not in table"):
+        table.tuned("stt", cap, node=TECH_10NM)
+    # single-node tables keep the implicit-node convenience
+    single = engine.design_table(("stt",), (cap,))
+    assert single.tuned("stt", cap).org is not None

@@ -21,10 +21,10 @@ import pytest
 import repro.configs as configs
 from benchmarks import lm_nvm
 from repro import scenarios
-from repro.core import (isoarea, isocap, scaling, sweep, traffic, tuner,
-                        workload_engine)
+from repro.core import (dtco, isoarea, isocap, scaling, sweep, traffic,
+                        tuner, workload_engine)
 from repro.core.isocap import INFER_BATCH, TRAIN_BATCH, MEMS
-from repro.core.tech import GTX_1080TI, TPU_V5E
+from repro.core.tech import GTX_1080TI, TECH_16NM, TECH_7NM, TPU_V5E
 from repro.core.workloads import alexnet, paper_workloads
 
 REL = 1e-12
@@ -141,7 +141,7 @@ def test_lm_rows_match_scalar():
 def test_analyses_route_through_sweep_only():
     """The acceptance criterion, enforced at the source level: no
     per-analysis engine/fold plumbing and no scalar energy calls."""
-    for mod in (isocap, isoarea, scaling):
+    for mod in (isocap, isoarea, scaling, dtco):
         src = inspect.getsource(mod)
         assert "engine.design_table(" not in src, mod.__name__
         assert "workload_engine.evaluate" not in src, mod.__name__
@@ -178,7 +178,7 @@ def test_lm_supported():
 
 def _row_key(r):
     return (r["platform"], r["workload"], r["batch"], r["stage"],
-            r["mem"], r["capacity_mb"], r["group"])
+            r["mem"], r["capacity_mb"], r["node"], r["group"])
 
 
 def _small_spec(scenarios_, designs_, platforms_, name):
@@ -192,7 +192,7 @@ def perm_base():
     workloads = dict(list(paper_workloads().items())[:3])
     spec = _small_spec(
         sweep.workload_scenarios(workloads, ((False, 4), (True, 8))),
-        sweep.design_grid(MEMS, (1, 2)),
+        sweep.design_grid(MEMS, (1, 2), nodes=(TECH_16NM, TECH_7NM)),
         (GTX_1080TI, TPU_V5E),
         "perm-base")
     return spec, {_row_key(r): r
@@ -201,8 +201,8 @@ def perm_base():
 
 @pytest.mark.parametrize("seed", range(4))
 def test_axis_permutation_keeps_row_labeling(perm_base, seed):
-    """Rows keyed by their axis labels are invariant under any
-    permutation of the scenario, design, and platform axes."""
+    """Rows keyed by their axis labels (node included) are invariant under
+    any permutation of the scenario, design, and platform axes."""
     spec, base_rows = perm_base
     rng = random.Random(seed)
     scenarios_ = list(spec.scenarios)
@@ -306,7 +306,7 @@ def test_norm_baseline_is_one(small_result):
     norm = small_result.norm_to()
     for name in sweep.METRICS:
         x = norm.metric(name)
-        for j, (mem, _) in enumerate(small_result.design_labels):
+        for j, (mem, _, _) in enumerate(small_result.design_labels):
             if mem == "sram":
                 assert x[:, :, j] == pytest.approx(1.0)
 

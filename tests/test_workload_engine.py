@@ -132,6 +132,23 @@ def test_index_errors(table):
         table.reports(0)  # 18 designs are not memory-unique
 
 
+def test_design_index_duplicate_mem_capacity_raises(stats_list):
+    """Regression: duplicate (mem, capacity) designs — e.g. the same
+    corner at two technology nodes — must raise even when capacity_bytes
+    is given, not silently return the first match."""
+    from repro.core.tech import TECH_7NM
+    cap = 3 * 2**20
+    d16 = engine.design_table(("sram",), (cap,)).tuned("sram", cap)
+    d7 = engine.design_table(("sram",), (cap,),
+                             nodes=TECH_7NM).tuned("sram", cap)
+    assert d16 != d7
+    dup = workload_engine.evaluate(stats_list[:1], (d16, d7))
+    with pytest.raises(ValueError, match="several designs"):
+        dup.design_index("sram", cap)
+    with pytest.raises(ValueError):
+        dup.design_index("sram")
+
+
 def test_stream_batch_mask_counts(stats_list):
     batch = workload_engine.pack(stats_list)
     for i, stats in enumerate(stats_list):
