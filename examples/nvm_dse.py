@@ -25,14 +25,31 @@ spec = sweep.SweepSpec(
 res = sweep.run(spec)
 
 # normalized EDP per (platform, workload, design), baseline = SRAM of the
-# same capacity group; keep the non-baseline rows of the tidy view
+# same capacity group; the query layer slices the labeled axes directly
 rows = [dict(platform=r["platform"], capacity_mb=r["capacity_mb"],
              workload=r["workload"], mem=r["mem"],
              edp_reduction=round(1.0 / r["edp_x"], 2))
-        for r in res.rows(include_dram=True) if r["mem"] != "sram"]
+        for r in res.filter(mem=("stt", "sot")).rows(include_dram=True)]
 print(markdown_table(rows))
 best = max(rows, key=lambda r: r["edp_reduction"])
 print("\nbest design point:", best)
+
+# -- DSE reductions: Pareto fronts + capacity plateaus -----------------------
+# Non-dominated (energy, runtime, area) designs per scenario, and the
+# capacity beyond which growing the cache buys < 5% EDP.
+front = res.pareto_front()
+print(f"\npareto front (energy/runtime/area): {len(front)} of "
+      f"{len(res.rows())} rows survive; alexnet×gtx front:")
+print(markdown_table(
+    [{k: r[k] for k in ("mem", "capacity_mb", "energy", "runtime", "area")}
+     for r in front
+     if r["platform"] == "gtx-1080ti" and r["workload"] == "alexnet"]))
+plateaus = [p for p in res.capacity_plateaus()
+            if p["platform"] == "gtx-1080ti" and p["workload"] == "alexnet"]
+print("\ncapacity plateaus (alexnet, EDP within 5% of best):")
+print(markdown_table([{k: p[k] for k in ("mem", "plateau_capacity_mb",
+                                         "best_capacity_mb")}
+                      for p in plateaus]))
 
 # -- cross-node DTCO: the node as one more batched axis ----------------------
 # One design_table call covers 16/12/10/7 nm; every node is normalized to

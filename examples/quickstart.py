@@ -40,3 +40,13 @@ edp_x = res.norm_to().metric("edp", include_dram=True)
 for m in ("stt", "sot"):
     print(f"tinyllama decode_32k, {m} 48MB buffer: "
           f"EDP reduction {1 / edp_x[0, 0, res.design_index(m)]:.1f}x")
+
+# 5. the same sweep as a serializable document (SweepSpec v2): names
+#    resolved through the registries, sharing the memoized result above —
+#    this JSON is exactly what `python -m repro.sweep run spec.json` takes
+sym = sweep.SymbolicSweepSpec(
+    scenarios=("lm/tinyllama-1.1b/decode_32k",),
+    designs=("sram@48MB", "stt@48MB", "sot@48MB"),
+    platforms=("tpu-v5e",), name="lm-nvm")
+assert sym.run() is res  # same registries, same memo, zero re-evaluation
+print("\nsymbolic form:\n" + sym.to_json())

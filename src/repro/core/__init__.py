@@ -8,6 +8,8 @@ Layers (paper Fig. 2):
     workload_engine    ... the workload fold as one batched computation
     cachesim           trace/analytic DRAM model               (SIII-D)
     sweep              one declarative SweepSpec driving both engines
+                       (+ the symbolic, JSON-round-trippable v2 form)
+    dse                Pareto fronts / capacity plateaus on SweepResults
     isocap / isoarea / scaling   architecture-level analyses   (Figs 3-10)
     dtco               cross-node DTCO sweep on the batched node axis
 """
@@ -17,6 +19,7 @@ from repro.core import (  # noqa: F401
     cachemodel,
     cachesim,
     calibration,
+    dse,
     dtco,
     engine,
     isoarea,

@@ -20,7 +20,7 @@ from collections.abc import Sequence
 from repro.core import sweep, tuner
 from repro.core.isocap import (INFER_BATCH, TRAIN_BATCH, IsoCapRow,
                                rows_from_result)
-from repro.core.tech import Platform, GTX_1080TI
+from repro.core.tech import Platform, GTX_1080TI, TechNode, TECH_16NM
 from repro.core.workloads import Workload, paper_workloads, alexnet
 
 
@@ -36,20 +36,28 @@ class IsoAreaDesigns:
         return {"sram": self.sram, "stt": self.stt, "sot": self.sot}
 
 
-def corners(sram_capacity_mb: float = 3.0) -> tuple[sweep.DesignPoint, ...]:
+def corners(sram_capacity_mb: float = 3.0,
+            node: TechNode = TECH_16NM) -> tuple[sweep.DesignPoint, ...]:
     """The iso-area design corners the area budget selects: SRAM at its
     own capacity, each MRAM flavor at the largest capacity fitting the
-    SRAM area (one normalization group — the SRAM baseline)."""
+    SRAM area (one normalization group — the SRAM baseline).  ``node``
+    runs the whole selection at another technology node: the area budget
+    (and so the MRAM capacities) is re-derived from that node's designs —
+    the per-node iso-area study."""
     return sweep.design_corners(
         (("sram", sram_capacity_mb),
-         ("stt", tuner.iso_area_capacity("stt", sram_capacity_mb)),
-         ("sot", tuner.iso_area_capacity("sot", sram_capacity_mb))))
+         ("stt", tuner.iso_area_capacity("stt", sram_capacity_mb,
+                                         node=node)),
+         ("sot", tuner.iso_area_capacity("sot", sram_capacity_mb,
+                                         node=node))),
+        nodes=(node,))
 
 
-def designs(sram_capacity_mb: float = 3.0) -> IsoAreaDesigns:
+def designs(sram_capacity_mb: float = 3.0,
+            node: TechNode = TECH_16NM) -> IsoAreaDesigns:
     """Iso-area design set, read from one shared batched sweep over the
     three (technology, capacity) corners the area budget selects."""
-    points = corners(sram_capacity_mb)
+    points = corners(sram_capacity_mb, node)
     _, (sram_d, stt_d, sot_d) = sweep.lower_designs(points)
     return IsoAreaDesigns(
         sram=sram_d, stt=stt_d, sot=sot_d,
@@ -81,15 +89,17 @@ def dram_reduction_curve(workload: Workload | None = None, batch: int = INFER_BA
 def analyze(workloads: dict[str, Workload] | None = None,
             platform: Platform = GTX_1080TI,
             infer_batch: int = INFER_BATCH,
-            train_batch: int = TRAIN_BATCH) -> list[IsoCapRow]:
+            train_batch: int = TRAIN_BATCH,
+            node: TechNode = TECH_16NM) -> list[IsoCapRow]:
     """Figs. 7/8: energy and EDP at iso-area (with/without DRAM terms) —
-    one declarative sweep at the iso-area corners."""
+    one declarative sweep at the iso-area corners (of ``node``, for the
+    per-node iso-area study)."""
     workloads = workloads if workloads is not None else paper_workloads()
     spec = sweep.SweepSpec(
-        name="isoarea",
+        name="isoarea" if node == TECH_16NM else f"isoarea@{node.name}",
         scenarios=sweep.workload_scenarios(
             workloads, ((False, infer_batch), (True, train_batch))),
-        designs=corners(),
+        designs=corners(node=node),
         platforms=(platform,))
     return rows_from_result(sweep.run(spec))
 

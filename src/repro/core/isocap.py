@@ -67,6 +67,22 @@ def rows_from_result(result: sweep.SweepResult,
             for i, (workload, batch, training) in enumerate(table.scenarios)]
 
 
+def spec(workloads: dict[str, Workload] | None = None,
+         capacity_mb: float = CAPACITY_MB,
+         platform: Platform = GTX_1080TI,
+         infer_batch: int = INFER_BATCH,
+         train_batch: int = TRAIN_BATCH) -> sweep.SweepSpec:
+    """The Figs. 3/4 study as one declarative sweep (the spec the golden
+    ``specs/isocap.json`` document resolves to)."""
+    workloads = workloads if workloads is not None else paper_workloads()
+    return sweep.SweepSpec(
+        name="isocap",
+        scenarios=sweep.workload_scenarios(
+            workloads, ((False, infer_batch), (True, train_batch))),
+        designs=sweep.design_grid(MEMS, (capacity_mb,)),
+        platforms=(platform,))
+
+
 def analyze(workloads: dict[str, Workload] | None = None,
             capacity_mb: float = CAPACITY_MB,
             platform: Platform = GTX_1080TI,
@@ -74,14 +90,8 @@ def analyze(workloads: dict[str, Workload] | None = None,
             train_batch: int = TRAIN_BATCH) -> list[IsoCapRow]:
     """Figs. 3/4: per workload x {inference, training} x memory — one
     declarative sweep over the iso-capacity design grid."""
-    workloads = workloads if workloads is not None else paper_workloads()
-    spec = sweep.SweepSpec(
-        name="isocap",
-        scenarios=sweep.workload_scenarios(
-            workloads, ((False, infer_batch), (True, train_batch))),
-        designs=sweep.design_grid(MEMS, (capacity_mb,)),
-        platforms=(platform,))
-    return rows_from_result(sweep.run(spec))
+    return rows_from_result(sweep.run(spec(
+        workloads, capacity_mb, platform, infer_batch, train_batch)))
 
 
 def batch_sweep(workload: Workload, training: bool,

@@ -9,23 +9,34 @@ from collections.abc import Iterable, Mapping, Sequence
 
 
 def csv_str(rows: Sequence[Mapping[str, object]],
-            fields: Sequence[str] | None = None) -> str:
+            fields: Sequence[str] | None = None,
+            fmt: "callable | None" = None) -> str:
+    """Rows to CSV text.  ``fmt`` maps each cell value; the default
+    human-readable rounding is ``_fmt``, and ``fmt_exact`` keeps floats at
+    full repr precision (the CLI's bit-for-bit mode)."""
     if not rows:
         return ""
+    fmt = fmt if fmt is not None else _fmt
     fields = list(fields) if fields else list(rows[0].keys())
     buf = io.StringIO()
     w = csv.DictWriter(buf, fieldnames=fields, extrasaction="ignore")
     w.writeheader()
     for r in rows:
-        w.writerow({k: _fmt(r.get(k)) for k in fields})
+        w.writerow({k: fmt(r.get(k)) for k in fields})
     return buf.getvalue()
 
 
 def write_csv(path: str, rows: Sequence[Mapping[str, object]],
-              fields: Sequence[str] | None = None) -> None:
+              fields: Sequence[str] | None = None,
+              fmt: "callable | None" = None) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "w") as f:
-        f.write(csv_str(rows, fields))
+        f.write(csv_str(rows, fields, fmt))
+
+
+def fmt_exact(v: object) -> object:
+    """Lossless cell formatting: floats via repr (round-trips exactly)."""
+    return repr(v) if isinstance(v, float) else v
 
 
 def markdown_table(rows: Sequence[Mapping[str, object]],

@@ -29,17 +29,39 @@ shapes from the result — no analysis owns its own designs/fold plumbing.
 Specs are hashable and ``run`` is memoized, so two analyses that declare
 the same axes share one evaluation end to end (the engines memoize their
 own layers as well, so partial overlap is also shared).
+
+**Symbolic specs (v2).**  :class:`SymbolicSweepSpec` is the serializable
+form of the same declaration: scenarios are names resolved through the
+unified registry (``"cnn/resnet18/train@b64"``, ``"lm/qwen3-14b/
+decode_32k"`` — repro.scenarios), designs name (mem, capacity, node)
+points (``"stt@3MB@10nm"``) or declare grid/corner axes
+(:class:`DesignGrid` / :class:`DesignCorners`), and platforms/nodes
+resolve via the registries in core/tech.py.  ``to_json``/``from_json``
+round-trip a versioned document, and ``resolve()`` lowers the symbolic
+spec to a concrete :class:`SweepSpec` — through the same memoized
+registry entry points, so a JSON-defined sweep shares the ``run`` memo
+(and the one-circuit-call + one-fold-call guarantee) with the equivalent
+Python-constructed spec.  ``python -m repro.sweep`` (repro/sweep_cli.py)
+is the service facade over this document form.
+
+On the result side, :class:`SweepResult` is a query surface:
+``filter()``/``select()`` slice the labeled axes into a
+:class:`SweepView`, and ``pareto_front()``/``capacity_plateaus()``
+(core/dse.py) reduce multi-capacity sweeps to the non-dominated designs
+and the capacity knee per scenario.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import json
+import re
 from collections.abc import Iterable, Mapping, Sequence
 
 import numpy as np
 
-from repro.core import engine, report, workload_engine
+from repro.core import dse, engine, report, tech, workload_engine
 from repro.core.cachemodel import CacheDesign
 from repro.core.tech import Platform, GTX_1080TI, TechNode, TECH_16NM
 from repro.core.traffic import TrafficStats
@@ -98,11 +120,73 @@ def design_grid(mems: Sequence[str] = MEMS,
 
 
 def design_corners(points: Sequence[tuple[str, float]],
-                   group: object = 0) -> tuple[DesignPoint, ...]:
+                   group: object = 0,
+                   nodes: TechNode | Sequence[TechNode] = (TECH_16NM,),
+                   ) -> tuple[DesignPoint, ...]:
     """Explicit (mem, capacity_mb) corners sharing one normalization group
-    — the iso-area design axis (different capacities, one SRAM baseline)."""
-    return tuple(DesignPoint(m, int(c * 2**20), group=group)
-                 for m, c in points)
+    — the iso-area design axis (different capacities, one SRAM baseline).
+
+    ``nodes`` replicates the corner set per node (parity with
+    ``design_grid``): a single node keeps the bare ``group`` label, several
+    nodes label each replica ``(node.name, group)`` so every node
+    normalizes against its own baseline corner — the per-node iso-area
+    comparison."""
+    nodes = (nodes,) if isinstance(nodes, TechNode) else tuple(nodes)
+    single = len(nodes) == 1
+    return tuple(DesignPoint(m, int(c * 2**20),
+                             group=group if single else (nd.name, group),
+                             node=nd)
+                 for nd in nodes for m, c in points)
+
+
+def group_label(group: object) -> str:
+    """Stable string form of a normalization-group label — the ``group``
+    column of ``SweepResult.rows()``/CSV output (floats via %g, tuple
+    labels slash-joined; no Python ``repr`` leaks into serialized rows)."""
+    if isinstance(group, tuple):
+        return "/".join(group_label(g) for g in group)
+    if isinstance(group, float):
+        return f"{group:g}"
+    return str(group)
+
+
+# ---------------------------------------------------------------------------
+# Symbolic design names ("stt@3MB@10nm")
+# ---------------------------------------------------------------------------
+
+_DESIGN_NAME_RE = re.compile(
+    r"(?P<mem>[a-z0-9_-]+)@(?P<cap>\d+(?:\.\d+)?)MB(?:@(?P<node>[^@]+))?\Z")
+
+
+def parse_design(name: str) -> tuple[str, float, TechNode]:
+    """Parse ``mem@<capacity>MB[@<node>]``; the node defaults to the
+    calibrated anchor and otherwise resolves via ``tech.node``."""
+    m = _DESIGN_NAME_RE.fullmatch(name)
+    if not m:
+        raise ValueError(f"bad design name {name!r}: expected "
+                         "'mem@<capacity>MB[@<node>]', e.g. 'stt@3MB@10nm'")
+    node = tech.node(m.group("node")) if m.group("node") else TECH_16NM
+    return m.group("mem"), float(m.group("cap")), node
+
+
+def design_name(point: DesignPoint, with_node: bool = True) -> str:
+    """Symbolic name of a design point (node omitted at the anchor)."""
+    name = f"{point.mem}@{point.capacity_mb:g}MB"
+    if with_node and point.node != TECH_16NM:
+        name += f"@{point.node.name}"
+    return name
+
+
+def _points_from_names(names: Sequence[str]) -> tuple[DesignPoint, ...]:
+    """A flat name list resolves with ``design_grid``'s group rule: one
+    normalization group per (node, capacity), bare per-capacity labels
+    when all points share one node (the historical row shape)."""
+    parsed = [parse_design(n) for n in names]
+    single = len({node for _, _, node in parsed}) == 1
+    return tuple(DesignPoint(m, int(c * 2**20),
+                             group=c if single else (nd.name, c),
+                             node=nd)
+                 for m, c, nd in parsed)
 
 
 def workload_scenarios(workloads: Mapping[str, Workload] | Iterable[Workload],
@@ -143,6 +227,240 @@ class SweepSpec:
 
     def run(self) -> SweepResult:
         return run(self)
+
+
+# ---------------------------------------------------------------------------
+# Symbolic SweepSpec v2: serializable, registry-resolved
+# ---------------------------------------------------------------------------
+
+SCHEMA = "deepnvm.sweepspec/2"
+
+
+def _as_tuple(x: object) -> tuple:
+    return x if isinstance(x, tuple) else tuple(x)
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignGrid:
+    """Symbolic (node x capacity x memory) grid — lowers via
+    ``design_grid`` (one normalization group per (node, capacity))."""
+
+    mems: tuple[str, ...] = MEMS
+    capacities_mb: tuple[float, ...] = (3,)
+    nodes: tuple[str, ...] = ()   # node names; empty = the 16 nm anchor
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "mems", _as_tuple(self.mems))
+        object.__setattr__(self, "capacities_mb",
+                           _as_tuple(self.capacities_mb))
+        object.__setattr__(self, "nodes", _as_tuple(self.nodes))
+
+    def points(self) -> tuple[DesignPoint, ...]:
+        nodes = tuple(tech.node(n) for n in self.nodes) or (TECH_16NM,)
+        return design_grid(self.mems, self.capacities_mb, nodes=nodes)
+
+    def to_doc(self) -> dict:
+        doc: dict = {"mems": list(self.mems),
+                     "capacities_mb": list(self.capacities_mb)}
+        if self.nodes:
+            doc["nodes"] = list(self.nodes)
+        return doc
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignCorners:
+    """Symbolic corner set — named (mem, capacity) points sharing one
+    normalization group per node, lowered via ``design_corners``.  Corner
+    names carry no node suffix; the ``nodes`` field replicates the set."""
+
+    points: tuple[str, ...]       # "mem@<capacity>MB" names
+    group: object = 0
+    nodes: tuple[str, ...] = ()
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "points", _as_tuple(self.points))
+        object.__setattr__(self, "nodes", _as_tuple(self.nodes))
+        if isinstance(self.group, list):   # JSON arrays -> hashable labels
+            object.__setattr__(self, "group", tuple(self.group))
+
+    def corner_pairs(self) -> tuple[tuple[str, float], ...]:
+        pairs = []
+        for name in self.points:
+            mem, cap, node = parse_design(name)
+            if node != TECH_16NM:
+                raise ValueError(
+                    f"corner {name!r} must not name a node; corner sets "
+                    "carry nodes via the 'nodes' field")
+            pairs.append((mem, cap))
+        return tuple(pairs)
+
+    def resolved_points(self) -> tuple[DesignPoint, ...]:
+        nodes = tuple(tech.node(n) for n in self.nodes) or (TECH_16NM,)
+        return design_corners(self.corner_pairs(), group=self.group,
+                              nodes=nodes)
+
+    def to_doc(self) -> dict:
+        doc: dict = {"points": list(self.points)}
+        if self.group != 0:
+            doc["group"] = self.group
+        if self.nodes:
+            doc["nodes"] = list(self.nodes)
+        return doc
+
+
+def _designs_from_doc(doc: object) -> tuple[str, ...] | DesignGrid | DesignCorners:
+    if isinstance(doc, Mapping):
+        if set(doc) == {"grid"}:
+            return DesignGrid(**doc["grid"])
+        if set(doc) == {"corners"}:
+            return DesignCorners(**doc["corners"])
+        raise ValueError(f"bad designs document {sorted(doc)}: expected "
+                         "a name list, {'grid': ...}, or {'corners': ...}")
+    return _as_tuple(doc)
+
+
+@dataclasses.dataclass(frozen=True)
+class SymbolicSweepSpec:
+    """SweepSpec v2: the same scenarios x designs x platforms declaration
+    with every axis symbolic — names resolved through registries — and a
+    JSON-round-trippable, versioned document form.
+
+    ``resolve()`` lowers to a concrete :class:`SweepSpec` through the
+    memoized registry entry points, so an equal symbolic spec (however it
+    was constructed — JSON, ``from_spec``, or by hand) resolves to an
+    equal concrete spec and therefore shares one memoized ``run`` result.
+    """
+
+    scenarios: tuple[str, ...]
+    designs: tuple[str, ...] | DesignGrid | DesignCorners
+    platforms: tuple[str, ...] = (GTX_1080TI.name,)
+    baseline_mem: str = BASELINE_MEM
+    name: str = "sweep"
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "scenarios", _as_tuple(self.scenarios))
+        object.__setattr__(self, "platforms", _as_tuple(self.platforms))
+        if not isinstance(self.designs, (DesignGrid, DesignCorners)):
+            object.__setattr__(self, "designs", _as_tuple(self.designs))
+
+    # -- lowering ----------------------------------------------------------
+
+    def design_points(self) -> tuple[DesignPoint, ...]:
+        if isinstance(self.designs, DesignGrid):
+            return self.designs.points()
+        if isinstance(self.designs, DesignCorners):
+            return self.designs.resolved_points()
+        return _points_from_names(self.designs)
+
+    def resolve(self) -> SweepSpec:
+        """Lower to a concrete spec (today's axes): scenario names through
+        the unified registry, design names/grids to DesignPoints, platform
+        names through ``tech.PLATFORMS``."""
+        # repro.scenarios builds on this module; resolve late to keep the
+        # registry layering acyclic.
+        from repro import scenarios as scenario_registry
+        return SweepSpec(
+            name=self.name,
+            scenarios=tuple(scenario_registry.resolve(n)
+                            for n in self.scenarios),
+            designs=self.design_points(),
+            platforms=tuple(tech.platform(p) for p in self.platforms),
+            baseline_mem=self.baseline_mem)
+
+    def run(self) -> SweepResult:
+        return self.resolve().run()
+
+    # -- (de)serialization -------------------------------------------------
+
+    def to_doc(self) -> dict:
+        designs: object = list(self.designs) \
+            if isinstance(self.designs, tuple) else \
+            {"grid": self.designs.to_doc()} \
+            if isinstance(self.designs, DesignGrid) else \
+            {"corners": self.designs.to_doc()}
+        return {"schema": SCHEMA,
+                "name": self.name,
+                "scenarios": list(self.scenarios),
+                "designs": designs,
+                "platforms": list(self.platforms),
+                "baseline_mem": self.baseline_mem}
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_doc(), indent=indent) + "\n"
+
+    @classmethod
+    def from_json(cls, doc: str | Mapping) -> SymbolicSweepSpec:
+        if not isinstance(doc, Mapping):
+            doc = json.loads(doc)
+        if doc.get("schema") != SCHEMA:
+            raise ValueError(f"unsupported spec schema {doc.get('schema')!r}"
+                             f" (this build reads {SCHEMA!r})")
+        known = {"schema", "name", "scenarios", "designs", "platforms",
+                 "baseline_mem"}
+        unknown = set(doc) - known
+        if unknown:
+            raise ValueError(f"unknown spec fields {sorted(unknown)}; "
+                             f"known: {sorted(known)}")
+        missing = {"scenarios", "designs"} - set(doc)
+        if missing:
+            raise ValueError(f"spec document lacks {sorted(missing)}")
+        return cls(
+            scenarios=_as_tuple(doc["scenarios"]),
+            designs=_designs_from_doc(doc["designs"]),
+            platforms=_as_tuple(doc.get("platforms", (GTX_1080TI.name,))),
+            baseline_mem=doc.get("baseline_mem", BASELINE_MEM),
+            name=doc.get("name", "sweep"))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @classmethod
+    def load(cls, path: str) -> SymbolicSweepSpec:
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    # -- concrete -> symbolic ----------------------------------------------
+
+    @classmethod
+    def from_spec(cls, spec: SweepSpec) -> SymbolicSweepSpec:
+        """Symbolize a concrete spec (golden-file generation, serving).
+        Scenario names come from the registry's inverse mapping; designs
+        become a flat name list when their groups follow the grid rule, a
+        corner set when they share one group.  Custom group labelings have
+        no symbolic form and raise."""
+        from repro import scenarios as scenario_registry
+        return cls(
+            scenarios=tuple(scenario_registry.name_of(s)
+                            for s in spec.scenarios),
+            designs=_symbolic_designs(spec.designs),
+            platforms=tuple(p.name for p in spec.platforms),
+            baseline_mem=spec.baseline_mem,
+            name=spec.name)
+
+
+def _symbolic_designs(points: Sequence[DesignPoint],
+                      ) -> tuple[str, ...] | DesignCorners:
+    single = len({p.node for p in points}) == 1
+    def grid_group(p: DesignPoint) -> object:
+        return float(p.capacity_mb) if single \
+            else (p.node.name, float(p.capacity_mb))
+    if all(p.group == grid_group(p) for p in points):
+        return tuple(design_name(p) for p in points)
+    groups = {p.group for p in points}
+    if single and len(groups) == 1:
+        node = points[0].node
+        return DesignCorners(
+            points=tuple(design_name(p, with_node=False) for p in points),
+            group=next(iter(groups)),
+            nodes=() if node == TECH_16NM else (node.name,))
+    raise ValueError("designs with custom normalization groups have no "
+                     "symbolic form; serialize grid- or corner-shaped axes")
+
+
+def load_spec(path: str) -> SymbolicSweepSpec:
+    """Module-level convenience: read a spec JSON document."""
+    return SymbolicSweepSpec.load(path)
 
 
 # ---------------------------------------------------------------------------
@@ -282,33 +600,58 @@ class SweepResult:
         """Metrics normalized to the baseline design of each group."""
         return NormalizedSweep(self, self.baseline_indices(baseline_mem))
 
+    # -- labeled-axis attributes (rows()/filter()/dse vocabulary) ----------
+
+    def scenario_attrs(self, i: int) -> dict:
+        workload, batch, training = self.scenario_labels[i]
+        return dict(workload=workload, batch=batch,
+                    stage="train" if training else "infer")
+
+    def design_attrs(self, j: int) -> dict:
+        p = self.spec.designs[j]
+        return dict(mem=p.mem, capacity_mb=p.capacity_mb, node=p.node.name,
+                    group=group_label(p.group))
+
+    # -- query surface -----------------------------------------------------
+
+    def view(self) -> SweepView:
+        """The whole result as a filterable view."""
+        return SweepView(self,
+                         tuple(range(len(self.platform_labels))),
+                         tuple(range(len(self.scenario_labels))),
+                         tuple(range(len(self.spec.designs))))
+
+    def filter(self, **criteria) -> SweepView:
+        """Select by labeled-axis attributes — ``platform``, scenario keys
+        (``workload``/``batch``/``stage``/``training``), design keys
+        (``mem``/``capacity_mb``/``node``/``group``).  A criterion is a
+        scalar, a collection (membership), or a predicate."""
+        return self.view().filter(**criteria)
+
+    def select(self, *fields: str, include_dram: bool = False) -> list[tuple]:
+        return self.view().select(*fields, include_dram=include_dram)
+
+    # -- DSE reductions (core/dse.py) --------------------------------------
+
+    def pareto_front(self, objectives: Sequence[str] = dse.DEFAULT_OBJECTIVES,
+                     include_dram: bool = False) -> list[dict]:
+        """Per-(platform, scenario) non-dominated designs over the given
+        minimize-objectives (default energy/runtime/area)."""
+        return dse.pareto_front(self, objectives, include_dram)
+
+    def capacity_plateaus(self, metric: str = "edp",
+                          include_dram: bool = True,
+                          rel_tol: float = 0.05) -> list[dict]:
+        """Per-(platform, scenario, mem, node) capacity knee: the smallest
+        capacity within ``rel_tol`` of the best over the capacity axis."""
+        return dse.capacity_plateaus(self, metric, include_dram, rel_tol)
+
     # -- tidy materialization ----------------------------------------------
 
     def rows(self, include_norm: bool = True,
              include_dram: bool = False) -> list[dict]:
         """Long-format rows: one dict per (platform, scenario, design)."""
-        m = {name: self.metric(name, include_dram) for name in METRICS}
-        norm = self.norm_to() if include_norm else None
-        x = {name: norm.metric(name, include_dram)
-             for name in METRICS} if include_norm else {}
-        out = []
-        for pi, platform in enumerate(self.platform_labels):
-            for si, (workload, batch, training) in \
-                    enumerate(self.scenario_labels):
-                for di, point in enumerate(self.spec.designs):
-                    row = dict(platform=platform, workload=workload,
-                               batch=batch,
-                               stage="train" if training else "infer",
-                               mem=point.mem,
-                               capacity_mb=point.capacity_mb,
-                               node=point.node.name,
-                               group=point.group)
-                    row.update({_ROW_FIELD[k]: float(v[pi, si, di])
-                                for k, v in m.items()})
-                    row.update({f"{k}_x": float(v[pi, si, di])
-                                for k, v in x.items()})
-                    out.append(row)
-        return out
+        return self.view().rows(include_norm, include_dram)
 
     def summary(self, include_dram: bool = True) -> dict:
         """Per-(platform, non-baseline mem) aggregate reductions over all
@@ -341,8 +684,12 @@ class SweepResult:
         return out
 
     def to_csv(self, path: str, include_norm: bool = True,
-               include_dram: bool = False) -> None:
-        report.write_csv(path, self.rows(include_norm, include_dram))
+               include_dram: bool = False, exact: bool = False) -> None:
+        """Write rows as CSV.  ``exact`` keeps full float precision (repr
+        round-trip — the CLI's bit-for-bit reproduction mode) instead of
+        the human-readable rounding."""
+        report.write_csv(path, self.rows(include_norm, include_dram),
+                         fmt=report.fmt_exact if exact else None)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -356,3 +703,121 @@ class NormalizedSweep:
     def metric(self, name: str, include_dram: bool = False) -> np.ndarray:
         m = self.result.metric(name, include_dram)
         return m / m[:, :, self.baseline]
+
+
+# ---------------------------------------------------------------------------
+# SweepView: filter/select on labeled axes
+# ---------------------------------------------------------------------------
+
+
+def _match(criterion: object, value: object) -> bool:
+    if callable(criterion):
+        return bool(criterion(value))
+    if isinstance(criterion, (list, tuple, set, frozenset)):
+        return value in criterion
+    return value == criterion
+
+
+_SCENARIO_KEYS = ("workload", "batch", "stage", "training")
+_DESIGN_KEYS = ("mem", "capacity_mb", "node", "group")
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SweepView:
+    """Index selection on a SweepResult's [platform, scenario, design]
+    axes — the query layer ``filter()`` chains on.  Metric tensors are
+    sliced from the shared result (nothing is re-evaluated); ``rows()``
+    normalization baselines stay those of the *full* result, so a filtered
+    view reports the same normalized values as the full row set."""
+
+    result: SweepResult
+    platform_ids: tuple[int, ...]
+    scenario_ids: tuple[int, ...]
+    design_ids: tuple[int, ...]
+
+    def __len__(self) -> int:
+        return (len(self.platform_ids) * len(self.scenario_ids)
+                * len(self.design_ids))
+
+    # -- filtering ---------------------------------------------------------
+
+    def filter(self, **criteria) -> SweepView:
+        known = ("platform",) + _SCENARIO_KEYS + _DESIGN_KEYS
+        unknown = set(criteria) - set(known)
+        if unknown:
+            raise ValueError(f"unknown filter keys {sorted(unknown)}; "
+                             f"known: {sorted(known)}")
+        r = self.result
+        p_ids = tuple(i for i in self.platform_ids
+                      if "platform" not in criteria
+                      or _match(criteria["platform"], r.platform_labels[i]))
+        s_ids = tuple(i for i in self.scenario_ids
+                      if self._scenario_ok(i, criteria))
+        d_ids = tuple(j for j in self.design_ids
+                      if self._design_ok(j, criteria))
+        return SweepView(r, p_ids, s_ids, d_ids)
+
+    def _scenario_ok(self, i: int, criteria: Mapping) -> bool:
+        attrs = self.result.scenario_attrs(i)
+        attrs["training"] = attrs["stage"] == "train"
+        return all(_match(criteria[k], attrs[k])
+                   for k in _SCENARIO_KEYS if k in criteria)
+
+    def _design_ok(self, j: int, criteria: Mapping) -> bool:
+        point = self.result.spec.designs[j]
+        for key in _DESIGN_KEYS:
+            if key not in criteria:
+                continue
+            crit = criteria[key]
+            if key == "node":
+                crit = crit.name if isinstance(crit, TechNode) else crit
+                ok = _match(crit, point.node.name)
+            elif key == "group":
+                # raw group objects and their stable labels both match; a
+                # criterion equal to the raw group compares directly, so
+                # tuple groups (DTCO) don't read as membership collections
+                ok = crit == point.group or _match(crit, point.group) \
+                    or _match(crit, group_label(point.group))
+            else:
+                ok = _match(crit, getattr(point, key))
+            if not ok:
+                return False
+        return True
+
+    # -- materialization ---------------------------------------------------
+
+    def metric(self, name: str, include_dram: bool = False) -> np.ndarray:
+        """[p', s', d'] slice of one METRICS tensor."""
+        m = self.result.metric(name, include_dram)
+        return m[np.ix_(self.platform_ids, self.scenario_ids,
+                        self.design_ids)]
+
+    def rows(self, include_norm: bool = True,
+             include_dram: bool = False) -> list[dict]:
+        r = self.result
+        m = {name: r.metric(name, include_dram) for name in METRICS}
+        x = {name: r.norm_to().metric(name, include_dram)
+             for name in METRICS} if include_norm else {}
+        out = []
+        for pi in self.platform_ids:
+            for si in self.scenario_ids:
+                for di in self.design_ids:
+                    row = dict(platform=r.platform_labels[pi],
+                               **r.scenario_attrs(si),
+                               **r.design_attrs(di))
+                    row.update({_ROW_FIELD[k]: float(v[pi, si, di])
+                                for k, v in m.items()})
+                    row.update({f"{k}_x": float(v[pi, si, di])
+                                for k, v in x.items()})
+                    out.append(row)
+        return out
+
+    def select(self, *fields: str, include_dram: bool = False) -> list[tuple]:
+        """Project rows onto the named columns (raw metric columns,
+        ``*_x`` normalized columns, or axis labels)."""
+        needs_norm = any(f.endswith("_x") for f in fields)
+        rows = self.rows(include_norm=needs_norm, include_dram=include_dram)
+        if rows and (bad := set(fields) - set(rows[0])):
+            raise ValueError(f"unknown columns {sorted(bad)}; available: "
+                             f"{sorted(rows[0])}")
+        return [tuple(r[f] for f in fields) for r in rows]

@@ -20,6 +20,7 @@ Units: seconds, joules, watts, meters**2 (area in mm^2 where noted), bytes.
 from __future__ import annotations
 
 import dataclasses
+import re
 
 # ---------------------------------------------------------------------------
 # 16 nm FinFET node (calibrated to the paper's commercial PDK anchors)
@@ -109,6 +110,37 @@ TECH_7NM = scaled_node(7e-9)
 
 
 # ---------------------------------------------------------------------------
+# Node registry — symbolic name -> TechNode (SweepSpec v2 resolution)
+# ---------------------------------------------------------------------------
+
+# Canonical names of the prebuilt nodes.  ``node()`` additionally resolves
+# any "<feature>nm" spelling through ``scaled_node`` (those are exactly the
+# nodes that carry a calibration derivation rule), so a JSON spec can name
+# an arbitrary projection target without touching Python.
+NODES = {n.name: n for n in (TECH_16NM, TECH_12NM, TECH_10NM, TECH_7NM)}
+
+_NODE_NAME_RE = re.compile(r"(\d+(?:\.\d+)?)nm(?:-scaled|-finfet)?\Z")
+
+
+def node(name: str) -> TechNode:
+    """Resolve a symbolic node name: a canonical registry name
+    ("16nm-finfet", "7nm-scaled"), or any "<feature>nm" shorthand, which
+    maps to the anchor at 16 nm and to ``scaled_node`` otherwise."""
+    if name in NODES:
+        return NODES[name]
+    m = _NODE_NAME_RE.fullmatch(name)
+    if m:
+        # match registered nodes by their printed feature size first, so
+        # "7nm" is exactly TECH_7NM (float(7) * 1e-9 != 7e-9 in binary)
+        for n in NODES.values():
+            if f"{n.feature_size_m * 1e9:g}" == m.group(1):
+                return n
+        return scaled_node(float(m.group(1)) * 1e-9)
+    raise ValueError(f"unknown technology node {name!r}; canonical names: "
+                     f"{sorted(NODES)} (or any '<feature>nm' shorthand)")
+
+
+# ---------------------------------------------------------------------------
 # Platform descriptors (architecture layer)
 # ---------------------------------------------------------------------------
 
@@ -165,6 +197,22 @@ TPU_V5E = Platform(
 )
 
 TPU_ICI_BW = 50e9  # byte/s per link — used by launch/roofline.py
+
+
+# ---------------------------------------------------------------------------
+# Platform registry — symbolic name -> Platform (SweepSpec v2 resolution)
+# ---------------------------------------------------------------------------
+
+PLATFORMS = {p.name: p for p in (GTX_1080TI, TPU_V5E)}
+
+
+def platform(name: str) -> Platform:
+    """Resolve a symbolic platform name through the registry."""
+    try:
+        return PLATFORMS[name]
+    except KeyError:
+        raise ValueError(f"unknown platform {name!r}; available: "
+                         f"{sorted(PLATFORMS)}") from None
 
 
 def pj(x: float) -> float:

@@ -17,6 +17,7 @@ applied to the JAX framework's own workloads (DESIGN.md §2).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from collections.abc import Sequence
 
 DTYPE_BYTES = 4  # Caffe fp32
@@ -206,6 +207,24 @@ def paper_workloads() -> dict[str, Workload]:
     """The five DNNs of paper Table III, in figure order."""
     return {w.name: w for w in
             (alexnet(), googlenet(), vgg16(), resnet18(), squeezenet())}
+
+
+@functools.lru_cache(maxsize=None)
+def registry() -> dict[str, Workload]:
+    """The CNN side of the unified scenario namespace ("cnn/<name>/...",
+    repro.scenarios): every named workload the traffic model knows.
+    Currently the paper Table III networks; new entries extend the
+    symbolic-spec vocabulary without touching the resolver."""
+    return paper_workloads()
+
+
+def get(name: str) -> Workload:
+    """Resolve a workload by registry name (symbolic-spec resolution)."""
+    try:
+        return registry()[name]
+    except KeyError:
+        raise ValueError(f"unknown workload {name!r}; available: "
+                         f"{sorted(registry())}") from None
 
 
 # Reference values from paper Table III for validation.

@@ -1,14 +1,24 @@
-"""Scenario registry — LM (arch x shape) cells as first-class sweep
-scenarios.
+"""Scenario registry — one symbolic namespace for every workload the
+pipeline can fold.
 
 The paper's CNN workloads enter the pipeline through the traffic model
 (``workload_engine.stats_for``); this module is the same entry point for
 the assigned LM architectures: every ``repro.configs`` architecture x
-{train_4k, decode_32k, long_500k} shape becomes a packed
+{train_4k, prefill_32k, decode_32k, long_500k} shape becomes a packed
 :class:`~repro.core.traffic.TrafficStats` built from the analytic byte
 accounting the roofline uses (``launch/flops.py``), so the whole LM study
 runs as one batched [arch-shape] x [mem, capacity] x [platform] fold on
 the workload engine.
+
+Both scenario kinds live under one namespace, resolved by :func:`resolve`
+(the symbolic SweepSpec v2 scenario axis, core/sweep.py):
+
+    cnn/<workload>/<stage>@b<batch>   e.g. "cnn/resnet18/train@b64"
+    lm/<arch>/<shape>                 e.g. "lm/qwen3-14b/decode_32k"
+
+``name_of`` is the inverse (used to serialize concrete specs), and a
+heterogeneous spec may mix both kinds on one scenario axis — they fold in
+a single batched evaluation.
 
 ``long_500k`` (524k-token decode) is only meaningful for sub-quadratic
 architectures (SSM / hybrid / linear attention); ``lm_supported`` encodes
@@ -23,14 +33,14 @@ from collections.abc import Sequence
 
 import repro.configs as configs
 from repro.configs.base import SHAPES
-from repro.core import sweep
+from repro.core import sweep, workload_engine, workloads
 from repro.core.tech import Platform, TechNode, TECH_16NM, TPU_V5E
 from repro.core.traffic import INF, AccessStream, TrafficStats
 from repro.launch import flops as flops_mod
 
 # The LM study's shape axis, in row order.  long_500k rows exist only for
 # sub-quadratic architectures (see lm_supported).
-LM_SHAPES = ("train_4k", "decode_32k", "long_500k")
+LM_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
 LM_CAPACITY_MB = 48  # TPU-class last-level on-chip buffer (VMEM regime)
 
 
@@ -83,6 +93,69 @@ def lm_scenarios(archs: Sequence[str] | None = None,
     archs = tuple(archs) if archs is not None else configs.all_archs()
     return tuple(lm_traffic(a, s) for a in archs for s in shapes
                  if lm_supported(a, s))
+
+
+# ---------------------------------------------------------------------------
+# The unified symbolic namespace (SweepSpec v2 scenario axis)
+# ---------------------------------------------------------------------------
+
+_STAGES = {"train": True, "infer": False}
+
+
+def resolve(name: str) -> TrafficStats:
+    """Resolve one symbolic scenario name to its TrafficStats.
+
+    ``cnn/<workload>/<stage>@b<batch>`` routes through the shared memoized
+    ``workload_engine.stats_for`` (the paper-CNN entry point);
+    ``lm/<arch>/<shape>`` through :func:`lm_traffic`.  Both are memoized,
+    so a resolved spec shares scenario objects — and therefore the
+    ``sweep.run`` memo — with the equivalent Python-constructed spec.
+    """
+    kind, _, rest = name.partition("/")
+    if kind == "cnn":
+        workload_name, _, stage_spec = rest.partition("/")
+        stage, sep, batch_s = stage_spec.partition("@b")
+        if stage not in _STAGES or not sep or not batch_s.isdigit():
+            raise ValueError(
+                f"bad CNN scenario {name!r}: expected "
+                "'cnn/<workload>/{train|infer}@b<batch>'")
+        return workload_engine.stats_for(workloads.get(workload_name),
+                                         int(batch_s), _STAGES[stage])
+    if kind == "lm":
+        arch, _, shape = rest.partition("/")
+        if shape not in SHAPES:
+            raise ValueError(f"bad LM scenario {name!r}: unknown shape "
+                             f"{shape!r}; available: {sorted(SHAPES)}")
+        if arch not in configs.all_archs():
+            raise ValueError(f"bad LM scenario {name!r}: unknown arch "
+                             f"{arch!r}; available: {configs.all_archs()}")
+        if not lm_supported(arch, shape):
+            raise ValueError(f"unsupported LM scenario {name!r}: "
+                             f"{shape} needs a sub-quadratic architecture")
+        return lm_traffic(arch, shape)
+    raise ValueError(f"unknown scenario namespace in {name!r}: expected "
+                     "'cnn/...' or 'lm/...'")
+
+
+def name_of(stats: TrafficStats) -> str:
+    """Inverse of :func:`resolve` — the symbolic name of a registry-built
+    scenario (LM cells carry their 'arch/shape' key as the workload)."""
+    if "/" in stats.workload:
+        return f"lm/{stats.workload}"
+    stage = "train" if stats.training else "infer"
+    return f"cnn/{stats.workload}/{stage}@b{stats.batch}"
+
+
+def names(cnn_stages: Sequence[tuple[bool, int]] = ((False, 4), (True, 64)),
+          ) -> tuple[str, ...]:
+    """Every scenario name the registry resolves, CNNs at the given
+    (training, batch) stages (the namespace is batch-parametric, so the
+    CNN side enumerates representative stages only)."""
+    cnn = tuple(f"cnn/{w}/{'train' if t else 'infer'}@b{b}"
+                for w in workloads.registry() for t, b in cnn_stages)
+    lm = tuple(f"lm/{a}/{s}" for a in configs.all_archs() for s in LM_SHAPES
+               if lm_supported(a, s))
+    return cnn + lm
 
 
 def lm_sweep_spec(capacity_mb: float = LM_CAPACITY_MB,

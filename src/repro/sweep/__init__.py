@@ -1,0 +1,36 @@
+"""Public sweep API + the ``python -m repro.sweep`` service entry point.
+
+Re-exports the declarative pipeline (repro.core.sweep) and the symbolic
+SweepSpec v2 document layer so consumers address one namespace:
+
+    from repro import sweep
+    result = sweep.load_spec("spec.json").run()
+
+``python -m repro.sweep run|show|serve`` dispatches to repro.sweep_cli.
+"""
+
+from repro.core.sweep import (  # noqa: F401
+    SCHEMA,
+    DesignCorners,
+    DesignGrid,
+    DesignPoint,
+    SweepResult,
+    SweepSpec,
+    SweepView,
+    SymbolicSweepSpec,
+    design_corners,
+    design_grid,
+    design_name,
+    group_label,
+    load_spec,
+    parse_design,
+    run,
+    workload_scenarios,
+)
+
+__all__ = [
+    "SCHEMA", "DesignCorners", "DesignGrid", "DesignPoint", "SweepResult",
+    "SweepSpec", "SweepView", "SymbolicSweepSpec", "design_corners",
+    "design_grid", "design_name", "group_label", "load_spec",
+    "parse_design", "run", "workload_scenarios",
+]

@@ -1,0 +1,182 @@
+"""Sweep-as-a-service: the CLI / service facade over symbolic SweepSpecs.
+
+    python -m repro.sweep run spec.json --csv out.csv
+    python -m repro.sweep show spec.json
+    python -m repro.sweep serve < requests.jsonl
+
+``run`` lowers one JSON spec document (core/sweep.py, schema
+``deepnvm.sweepspec/2``) through the registries and evaluates it — exactly
+one circuit-engine call plus one workload-fold call — then writes the
+long-format rows as full-precision CSV (floats repr-round-trip, so a
+JSON-defined sweep reproduces the Python pipeline bit-for-bit).  ``show``
+resolves without evaluating (spec linting).  ``serve`` is the long-lived
+mode: it answers JSONL sweep requests from stdin on stdout, one response
+line per request, with every memoized layer (scenario statistics, design
+tables, Algorithm-1 tunings, fold tables, sweep results) staying warm
+across requests — repeated or overlapping specs cost one evaluation.
+
+A serve request is either a bare spec document or an envelope::
+
+    {"spec": {...}, "want": ["rows", "summary", "pareto", "plateaus"],
+     "include_dram": false}
+
+The response is one JSON object: ``{"ok": true, "name": ..., "axes":
+{...}, "elapsed_ms": ..., <one key per requested view>}`` — or
+``{"ok": false, "error": ...}`` on a bad request (the process keeps
+serving).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from collections.abc import Mapping
+
+from repro.core import report
+from repro.core.sweep import SymbolicSweepSpec
+
+WANTS = ("rows", "summary", "pareto", "plateaus")
+
+
+def _load(path: str) -> SymbolicSweepSpec:
+    if path == "-":
+        return SymbolicSweepSpec.from_json(sys.stdin.read())
+    return SymbolicSweepSpec.load(path)
+
+
+def _axes(spec) -> dict:
+    return {"platforms": len(spec.platforms),
+            "scenarios": len(spec.scenarios),
+            "designs": len(spec.designs)}
+
+
+def cmd_run(args: argparse.Namespace) -> None:
+    sym = _load(args.spec)
+    result = sym.run()
+    rows = result.rows(include_norm=not args.no_norm,
+                       include_dram=args.include_dram)
+    # status lines go to stderr: stdout carries only data (the rows CSV
+    # when --csv is omitted, the --summary JSON), so redirection is safe
+    if args.csv:
+        report.write_csv(args.csv, rows, fmt=report.fmt_exact)
+        axes = _axes(result.spec)
+        print(f"{sym.name}: {len(rows)} rows "
+              f"({axes['platforms']} platforms x {axes['scenarios']} "
+              f"scenarios x {axes['designs']} designs) -> {args.csv}",
+              file=sys.stderr)
+    else:
+        sys.stdout.write(report.csv_str(rows, fmt=report.fmt_exact))
+    if args.pareto:
+        report.write_csv(args.pareto, result.pareto_front(
+            include_dram=args.include_dram), fmt=report.fmt_exact)
+        print(f"pareto front -> {args.pareto}", file=sys.stderr)
+    if args.plateaus:
+        report.write_csv(args.plateaus, result.capacity_plateaus(),
+                         fmt=report.fmt_exact)
+        print(f"capacity plateaus -> {args.plateaus}", file=sys.stderr)
+    if args.summary:
+        print(json.dumps(result.summary(), indent=2))
+
+
+def cmd_show(args: argparse.Namespace) -> None:
+    sym = _load(args.spec)
+    spec = sym.resolve()
+    axes = _axes(spec)
+    print(f"{spec.name}: {axes['platforms']} platforms x "
+          f"{axes['scenarios']} scenarios x {axes['designs']} designs, "
+          f"baseline {spec.baseline_mem!r}")
+    print("platforms:", ", ".join(p.name for p in spec.platforms))
+    print("scenarios:", ", ".join(sym.scenarios))
+    print("designs:")
+    for p in spec.designs:
+        print(f"  {p.mem}@{p.capacity_mb:g}MB @{p.node.name} "
+              f"(group {p.group!r})")
+
+
+def answer(request: Mapping | str) -> dict:
+    """One serve-mode request -> one response document."""
+    try:
+        req = json.loads(request) if isinstance(request, str) else request
+        envelope = isinstance(req, Mapping) and "spec" in req
+        doc = req["spec"] if envelope else req
+        want = tuple(req.get("want", ("summary",))) if envelope \
+            else ("summary",)
+        unknown = set(want) - set(WANTS)
+        if unknown:
+            raise ValueError(f"unknown want items {sorted(unknown)}; "
+                             f"available: {list(WANTS)}")
+        include_dram = bool(req.get("include_dram", False)) if envelope \
+            else False
+        sym = SymbolicSweepSpec.from_json(doc)
+        t0 = time.perf_counter()
+        result = sym.run()
+        resp: dict = {"ok": True, "name": sym.name,
+                      "axes": _axes(result.spec),
+                      "elapsed_ms": (time.perf_counter() - t0) * 1e3}
+        if "rows" in want:
+            resp["rows"] = result.rows(include_dram=include_dram)
+        if "summary" in want:
+            resp["summary"] = result.summary()
+        if "pareto" in want:
+            resp["pareto"] = result.pareto_front(include_dram=include_dram)
+        if "plateaus" in want:
+            resp["plateaus"] = result.capacity_plateaus()
+        return resp
+    except Exception as e:  # noqa: BLE001 — the server loop must survive
+        return {"ok": False, "error": f"{type(e).__name__}: {e}"}
+
+
+def serve(in_stream=None, out_stream=None) -> int:
+    """Long-lived JSONL loop: one request per line in, one response line
+    out.  Engine caches persist for the life of the process, so a warm
+    server answers repeated specs without re-evaluating anything."""
+    in_stream = in_stream if in_stream is not None else sys.stdin
+    out_stream = out_stream if out_stream is not None else sys.stdout
+    served = 0
+    for line in in_stream:
+        if not line.strip():
+            continue
+        out_stream.write(json.dumps(answer(line)) + "\n")
+        out_stream.flush()
+        served += 1
+    return served
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.sweep",
+        description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    run_p = sub.add_parser("run", help="evaluate a spec JSON document")
+    run_p.add_argument("spec", help="path to spec.json ('-' for stdin)")
+    run_p.add_argument("--csv", metavar="PATH",
+                       help="write rows CSV here (default: stdout)")
+    run_p.add_argument("--pareto", metavar="PATH",
+                       help="also write the per-scenario Pareto front")
+    run_p.add_argument("--plateaus", metavar="PATH",
+                       help="also write capacity-plateau rows")
+    run_p.add_argument("--summary", action="store_true",
+                       help="print the aggregate summary as JSON")
+    run_p.add_argument("--no-norm", action="store_true",
+                       help="omit the normalized (*_x) columns")
+    run_p.add_argument("--include-dram", action="store_true",
+                       help="include DRAM terms in energy/EDP columns")
+    run_p.set_defaults(func=cmd_run)
+
+    show_p = sub.add_parser("show", help="resolve a spec without running")
+    show_p.add_argument("spec")
+    show_p.set_defaults(func=cmd_show)
+
+    serve_p = sub.add_parser(
+        "serve", help="answer JSONL sweep requests from stdin (warm caches)")
+    serve_p.set_defaults(func=lambda args: serve())
+
+    args = ap.parse_args(argv)
+    args.func(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""Tests for the DSE reductions (core/dse.py): Pareto fronts pinned
+against a brute-force scalar check, and capacity-plateau detection."""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import dse, sweep
+from repro.core.isocap import MEMS
+from repro.core.workloads import paper_workloads
+
+CAPS_MB = (1, 2, 4, 8)   # the multi-capacity axis the fronts reduce
+
+
+@pytest.fixture(scope="module")
+def multi_cap_result():
+    spec = sweep.SweepSpec(
+        name="dse-test",
+        scenarios=sweep.workload_scenarios(
+            dict(list(paper_workloads().items())[:2]),
+            ((False, 4), (True, 64))),
+        designs=sweep.design_grid(MEMS, CAPS_MB),
+        platforms=(sweep.GTX_1080TI,))
+    return sweep.run(spec)
+
+
+# ---------------------------------------------------------------------------
+# pareto_mask: brute-force scalar reference
+# ---------------------------------------------------------------------------
+
+
+def _dominates(a, b) -> bool:
+    return all(x <= y for x, y in zip(a, b)) and any(
+        x < y for x, y in zip(a, b))
+
+
+def _brute_force_front(points) -> set[int]:
+    return {j for j, p in enumerate(points)
+            if not any(_dominates(q, p)
+                       for i, q in enumerate(points) if i != j)}
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_pareto_mask_matches_brute_force(seed):
+    rng = random.Random(seed)
+    n, k = rng.randint(2, 24), rng.randint(1, 4)
+    pts = [[rng.choice((0.25, 0.5, 1.0, 2.0)) for _ in range(k)]
+           for _ in range(n)]                    # ties included on purpose
+    mask = dse.pareto_mask(np.array(pts))
+    assert set(np.flatnonzero(mask)) == _brute_force_front(pts)
+
+
+def test_pareto_mask_duplicates_survive_together():
+    # two identical points: neither strictly dominates the other
+    mask = dse.pareto_mask(np.array([[1.0, 1.0], [1.0, 1.0], [2.0, 2.0]]))
+    assert mask.tolist() == [True, True, False]
+
+
+# ---------------------------------------------------------------------------
+# pareto_front on a real multi-capacity sweep
+# ---------------------------------------------------------------------------
+
+
+def test_pareto_front_matches_brute_force(multi_cap_result):
+    """Acceptance pin: the sweep-level front equals the brute-force scalar
+    check over every (platform, scenario) cell of a multi-capacity
+    sweep."""
+    res = multi_cap_result
+    objectives = ("energy", "runtime", "area")
+    front_rows = res.pareto_front(objectives)
+    got = {}
+    for r in front_rows:
+        got.setdefault((r["platform"], r["workload"], r["stage"]),
+                       set()).add(r["design_index"])
+    energy = res.metric("energy")
+    runtime = res.metric("runtime")
+    area = [d.area_mm2 for d in res.designs]
+    for pi, platform in enumerate(res.platform_labels):
+        for si, (workload, _, training) in enumerate(res.scenario_labels):
+            pts = [(float(energy[pi, si, j]), float(runtime[pi, si, j]),
+                    area[j]) for j in range(len(res.designs))]
+            ref = _brute_force_front(pts)
+            key = (platform, workload, "train" if training else "infer")
+            assert got[key] == ref, key
+
+
+def test_pareto_front_rows_are_consistent(multi_cap_result):
+    rows = multi_cap_result.pareto_front()
+    assert rows, "front must be non-empty"
+    for r in rows:
+        j = r["design_index"]
+        point = multi_cap_result.spec.designs[j]
+        assert (r["mem"], r["capacity_mb"]) == (point.mem, point.capacity_mb)
+        assert r["area"] == multi_cap_result.designs[j].area_mm2
+        assert r["front_size"] >= 1
+    # single-objective front = the argmin designs only
+    per_cell = {}
+    for r in multi_cap_result.pareto_front(("edp",), include_dram=True):
+        per_cell.setdefault((r["platform"], r["workload"], r["stage"]),
+                            []).append(r)
+    edp = multi_cap_result.metric("edp", include_dram=True)
+    for rows_ in per_cell.values():
+        assert len(rows_) == 1 or len(
+            {r["edp"] for r in rows_}) == 1      # ties only
+    assert min(r["edp"] for r in rows_) == pytest.approx(
+        float(edp.min(axis=2)[-1, -1]), rel=0, abs=0)
+
+
+# ---------------------------------------------------------------------------
+# capacity plateaus
+# ---------------------------------------------------------------------------
+
+
+def test_capacity_plateaus_brute_force(multi_cap_result):
+    res = multi_cap_result
+    rel_tol = 0.05
+    plateaus = res.capacity_plateaus("edp", include_dram=True,
+                                     rel_tol=rel_tol)
+    # every (platform, scenario, mem) cell of the 4-capacity grid reports
+    assert len(plateaus) == (len(res.platform_labels)
+                             * len(res.scenario_labels) * len(MEMS))
+    edp = res.metric("edp", include_dram=True)
+    by_mem = {m: [res.design_index(m, float(c)) for c in CAPS_MB]
+              for m in MEMS}
+    for row in plateaus:
+        pi = res.platform_labels.index(row["platform"])
+        si = [i for i, (w, _, t) in enumerate(res.scenario_labels)
+              if w == row["workload"]
+              and ("train" if t else "infer") == row["stage"]][0]
+        v = [float(edp[pi, si, j]) for j in by_mem[row["mem"]]]
+        best = min(v)
+        ref_plateau = next(c for c, val in zip(CAPS_MB, v)
+                           if val <= best * (1 + rel_tol))
+        assert row["plateau_capacity_mb"] == ref_plateau
+        assert row["best_capacity_mb"] == CAPS_MB[v.index(best)]
+        assert row["plateau_penalty"] <= rel_tol + 1e-12
+        assert row["plateau_capacity_mb"] <= row["best_capacity_mb"]
+
+
+def test_plateau_skips_single_capacity_axes():
+    from repro.core import isocap
+    res = sweep.run(isocap.spec())
+    assert res.capacity_plateaus() == []
+
+
+def test_objective_tensor_area_broadcast(multi_cap_result):
+    t = dse.objective_tensor(multi_cap_result, "area")
+    assert t.shape == multi_cap_result.metric("energy").shape
+    assert (t[0, 0] == t[-1, -1]).all()

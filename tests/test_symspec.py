@@ -1,0 +1,479 @@
+"""Tests for the symbolic SweepSpec v2 layer (core/sweep.py, scenarios
+registry, sweep CLI).
+
+Families:
+
+  naming     design-name / scenario-name parsing and their inverses,
+             registry resolution errors, node/platform registries;
+  round-trip from_json(to_json(spec)) == spec, and the resolved spec's
+             run() returns the *same memoized* SweepResult object as the
+             equivalent Python-constructed spec (randomized axis subsets
+             + the golden files);
+  golden     specs/{isocap,dtco,lm_nvm,mixed_cnn_lm}.json resolve to the
+             exact Python specs of the analyses they mirror;
+  cli        `python -m repro.sweep run` reproduces the Python pipeline's
+             rows bit-for-bit (full-precision CSV), and serve mode
+             answers JSONL requests and survives bad ones;
+  rows       group labels serialize as stable strings and survive a CSV
+             round-trip (no repr'd tuples);
+  query      filter()/select() on labeled axes.
+"""
+
+import csv
+import io
+import json
+import os
+import random
+
+import pytest
+
+from benchmarks import lm_nvm
+from repro import scenarios, sweep_cli
+from repro.core import dtco, isocap, sweep, tech, workload_engine, workloads
+from repro.core.sweep import DesignGrid, SymbolicSweepSpec
+from repro.core.tech import TECH_16NM, TECH_7NM, TECH_12NM
+
+SPEC_DIR = os.path.join(os.path.dirname(__file__), "..", "specs")
+
+
+def spec_path(name: str) -> str:
+    return os.path.join(SPEC_DIR, name)
+
+
+# ---------------------------------------------------------------------------
+# Naming: design names, scenario names, registries
+# ---------------------------------------------------------------------------
+
+
+def test_parse_design_roundtrip():
+    for name, parsed in (
+            ("sram@3MB", ("sram", 3.0, TECH_16NM)),
+            ("stt@48MB", ("stt", 48.0, TECH_16NM)),
+            ("sot@10MB@7nm", ("sot", 10.0, TECH_7NM)),
+            ("stt@1.5MB@12nm-scaled", ("stt", 1.5, TECH_12NM))):
+        assert sweep.parse_design(name) == parsed
+    # name -> point -> name round-trips (anchor node omitted)
+    point = sweep.DesignPoint("sot", int(10 * 2**20), node=TECH_7NM)
+    assert sweep.design_name(point) == "sot@10MB@7nm-scaled"
+    assert sweep.parse_design(sweep.design_name(point))[2] == TECH_7NM
+
+
+def test_parse_design_errors():
+    for bad in ("sram", "sram@3", "sram@3MB@7nm@extra", "@3MB", "sram@MB"):
+        with pytest.raises(ValueError):
+            sweep.parse_design(bad)
+
+
+def test_node_registry():
+    assert tech.node("16nm-finfet") is TECH_16NM
+    assert tech.node("16nm") is TECH_16NM
+    assert tech.node("7nm-scaled") is TECH_7NM
+    assert tech.node("7nm") == TECH_7NM
+    # arbitrary projections resolve through scaled_node (calibratable)
+    assert tech.node("5nm").feature_size_m == pytest.approx(5e-9)
+    with pytest.raises(ValueError):
+        tech.node("16lpp")
+
+
+def test_platform_registry():
+    assert tech.platform("gtx-1080ti") is tech.GTX_1080TI
+    assert tech.platform("tpu-v5e") is tech.TPU_V5E
+    with pytest.raises(ValueError):
+        tech.platform("h100")
+
+
+def test_workload_registry():
+    assert workloads.get("alexnet").name == "alexnet"
+    with pytest.raises(ValueError):
+        workloads.get("resnet50")
+
+
+def test_scenario_resolve_and_inverse():
+    s = scenarios.resolve("cnn/alexnet/train@b64")
+    assert (s.workload, s.batch, s.training) == ("alexnet", 64, True)
+    assert scenarios.name_of(s) == "cnn/alexnet/train@b64"
+    # memoized: equal names share one TrafficStats object
+    assert scenarios.resolve("cnn/alexnet/train@b64") is s
+    lm = scenarios.resolve("lm/qwen3-14b/prefill_32k")
+    assert lm.workload == "qwen3-14b/prefill_32k"
+    assert scenarios.name_of(lm) == "lm/qwen3-14b/prefill_32k"
+    assert scenarios.resolve("lm/qwen3-14b/prefill_32k") is lm
+
+
+def test_scenario_resolve_errors():
+    for bad in ("gpu/alexnet/infer@b4",          # unknown namespace
+                "cnn/resnet50/infer@b4",         # unknown workload
+                "cnn/alexnet/serve@b4",          # unknown stage
+                "cnn/alexnet/infer",             # missing batch
+                "cnn/alexnet/infer@bx",          # bad batch
+                "lm/qwen3-14b/decode_64k",       # unknown shape
+                "lm/gpt5/decode_32k",            # unknown arch
+                "lm/qwen3-14b/long_500k"):       # quadratic arch, 500k
+        with pytest.raises(ValueError):
+            scenarios.resolve(bad)
+
+
+def test_registry_names_resolve():
+    names = scenarios.names()
+    assert "cnn/alexnet/infer@b4" in names
+    assert "lm/qwen3-14b/prefill_32k" in names   # the widened shape
+    assert "lm/rwkv6-3b/long_500k" in names
+    assert "lm/qwen3-14b/long_500k" not in names
+    for name in names:
+        scenarios.resolve(name)
+
+
+def test_prefill_32k_in_lm_shapes():
+    assert "prefill_32k" in scenarios.LM_SHAPES
+    cells = [s.workload for s in scenarios.lm_scenarios()]
+    import repro.configs as configs
+    for arch in configs.all_archs():
+        assert f"{arch}/prefill_32k" in cells
+
+
+# ---------------------------------------------------------------------------
+# design_corners nodes= (parity with design_grid)
+# ---------------------------------------------------------------------------
+
+
+def test_design_corners_single_node_unchanged():
+    pts = sweep.design_corners((("sram", 3), ("stt", 7), ("sot", 10)))
+    assert all(p.node == TECH_16NM and p.group == 0 for p in pts)
+    # identical to the historical (pre-nodes) output
+    assert pts == tuple(sweep.DesignPoint(m, int(c * 2**20), group=0)
+                        for m, c in (("sram", 3), ("stt", 7), ("sot", 10)))
+
+
+def test_design_corners_multi_node_groups():
+    pts = sweep.design_corners((("sram", 3), ("stt", 7)),
+                               nodes=(TECH_16NM, TECH_7NM))
+    assert [p.node for p in pts] == [TECH_16NM, TECH_16NM,
+                                     TECH_7NM, TECH_7NM]
+    # per-node groups: each node normalizes against its own baseline
+    assert [p.group for p in pts] == [
+        ("16nm-finfet", 0), ("16nm-finfet", 0),
+        ("7nm-scaled", 0), ("7nm-scaled", 0)]
+
+
+def test_isoarea_corners_per_node():
+    """The per-node iso-area study the nodes= parameter unblocks: the
+    area budget (and so the MRAM capacities) re-derives from the target
+    node's designs."""
+    from repro.core import isoarea
+    pts = isoarea.corners(node=TECH_7NM)
+    assert all(p.node == TECH_7NM and p.group == 0 for p in pts)
+    caps = {p.mem: p.capacity_mb for p in pts}
+    assert caps["sram"] == 3.0
+    assert caps["stt"] >= 3.0 and caps["sot"] >= caps["stt"]
+
+
+def test_corners_registry_form():
+    sym = SymbolicSweepSpec(
+        scenarios=("cnn/alexnet/infer@b4",),
+        designs=sweep.DesignCorners(points=("sram@3MB", "stt@7MB",
+                                            "sot@10MB"),
+                                    nodes=("16nm", "7nm")))
+    pts = sym.design_points()
+    assert pts == sweep.design_corners(
+        (("sram", 3), ("stt", 7), ("sot", 10)),
+        nodes=(TECH_16NM, TECH_7NM))
+    # corner names must not smuggle nodes past the 'nodes' field
+    with pytest.raises(ValueError):
+        SymbolicSweepSpec(
+            scenarios=("cnn/alexnet/infer@b4",),
+            designs=sweep.DesignCorners(points=("stt@7MB@7nm",))
+        ).design_points()
+
+
+# ---------------------------------------------------------------------------
+# JSON round-trip + memoized-run identity (the property)
+# ---------------------------------------------------------------------------
+
+
+def _assert_roundtrip_identity(sym: SymbolicSweepSpec):
+    back = SymbolicSweepSpec.from_json(sym.to_json())
+    assert back == sym
+    assert back.resolve() == sym.resolve()
+    assert back.run() is sym.run()          # same memoized result object
+
+
+CNN_NAMES = tuple(f"cnn/{w}/{st}@b{b}"
+                  for w in ("alexnet", "resnet18", "squeezenet")
+                  for st, b in (("infer", 4), ("train", 8)))
+LM_NAMES = ("lm/tinyllama-1.1b/decode_32k", "lm/rwkv6-3b/long_500k",
+            "lm/hymba-1.5b/prefill_32k")
+DESIGN_NAMES = ("sram@1MB", "stt@1MB", "sot@1MB",
+                "sram@2MB", "stt@2MB", "sot@2MB")
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_json_roundtrip_resolves_to_memoized_result(seed):
+    """Property: any registry-named spec survives to_json/from_json and
+    the round-tripped spec's run() IS the original's memoized result."""
+    rng = random.Random(seed)
+    scen = rng.sample(CNN_NAMES + LM_NAMES, k=rng.randint(2, 5))
+    sym = SymbolicSweepSpec(
+        scenarios=tuple(scen),
+        designs=DESIGN_NAMES,
+        platforms=tuple(rng.sample(("gtx-1080ti", "tpu-v5e"),
+                                   k=rng.randint(1, 2))),
+        name=f"prop-{seed}")
+    _assert_roundtrip_identity(sym)
+
+
+def test_grid_and_corners_roundtrip():
+    _assert_roundtrip_identity(SymbolicSweepSpec(
+        scenarios=("cnn/alexnet/infer@b4",),
+        designs=DesignGrid(mems=("sram", "stt"), capacities_mb=(1, 2),
+                           nodes=("16nm-finfet", "7nm-scaled")),
+        name="grid-rt"))
+    _assert_roundtrip_identity(SymbolicSweepSpec(
+        scenarios=("cnn/alexnet/infer@b4",),
+        designs=sweep.DesignCorners(points=("sram@1MB", "stt@2MB"),
+                                    group="iso"),
+        name="corners-rt"))
+    # tuple-valued group labels survive the JSON list round-trip hashable
+    _assert_roundtrip_identity(SymbolicSweepSpec(
+        scenarios=("cnn/alexnet/infer@b4",),
+        designs=sweep.DesignCorners(points=("sram@1MB", "stt@2MB"),
+                                    group=("iso", 1)),
+        name="corners-tuple-rt"))
+
+
+def test_from_spec_inverse():
+    spec = isocap.spec()
+    sym = SymbolicSweepSpec.from_spec(spec)
+    assert sym.resolve() == spec
+    # custom group labelings have no symbolic form
+    odd = sweep.SweepSpec(
+        name="odd",
+        scenarios=sweep.workload_scenarios(
+            (workloads.get("alexnet"),), ((False, 4),)),
+        designs=(sweep.DesignPoint("sram", 2**20, group="a"),
+                 sweep.DesignPoint("stt", 2**20, group="b")))
+    with pytest.raises(ValueError):
+        SymbolicSweepSpec.from_spec(odd)
+
+
+def test_from_json_validation():
+    good = json.loads(SymbolicSweepSpec(
+        scenarios=("cnn/alexnet/infer@b4",),
+        designs=("sram@3MB",)).to_json())
+    with pytest.raises(ValueError):
+        SymbolicSweepSpec.from_json({**good, "schema": "deepnvm.sweepspec/1"})
+    with pytest.raises(ValueError):
+        SymbolicSweepSpec.from_json({**good, "frobnicate": 1})
+    missing = {k: v for k, v in good.items() if k != "designs"}
+    with pytest.raises(ValueError):
+        SymbolicSweepSpec.from_json(missing)
+    with pytest.raises(ValueError):
+        SymbolicSweepSpec.from_json(
+            {**good, "designs": {"grid": {}, "corners": {}}})
+
+
+# ---------------------------------------------------------------------------
+# Golden specs: the JSON documents of the shipped analyses
+# ---------------------------------------------------------------------------
+
+
+def test_golden_isocap_resolves_to_analysis_spec():
+    sym = sweep.load_spec(spec_path("isocap.json"))
+    assert sym.resolve() == isocap.spec()
+    assert sym.run() is sweep.run(isocap.spec())
+
+
+def test_golden_dtco_resolves_to_analysis_spec():
+    sym = sweep.load_spec(spec_path("dtco.json"))
+    assert isinstance(sym.designs, DesignGrid)
+    assert sym.resolve() == dtco.spec()
+    assert sym.run() is sweep.run(dtco.spec())
+
+
+def test_golden_lm_nvm_resolves_to_analysis_spec():
+    sym = sweep.load_spec(spec_path("lm_nvm.json"))
+    assert sym.resolve() == lm_nvm.spec()
+    assert sym.run() is sweep.run(lm_nvm.spec())
+
+
+def test_golden_files_are_normalized():
+    """The checked-in documents are exactly what to_json emits (no drift
+    between the files and the schema)."""
+    for name in ("isocap.json", "dtco.json", "lm_nvm.json",
+                 "mixed_cnn_lm.json"):
+        text = open(spec_path(name)).read()
+        assert SymbolicSweepSpec.from_json(text).to_json() == text, name
+
+
+def test_golden_mixed_folds_cnn_and_lm_together():
+    sym = sweep.load_spec(spec_path("mixed_cnn_lm.json"))
+    before = workload_engine.evaluate_platforms.cache_info()
+    res = sym.run()
+    after = workload_engine.evaluate_platforms.cache_info()
+    assert after.misses <= before.misses + 1   # one fold call for everything
+    kinds = {("lm" if "/" in w else "cnn")
+             for w, _, _ in res.scenario_labels}
+    assert kinds == {"cnn", "lm"}
+    # heterogeneous scenarios share the design axis and normalize per group
+    assert res.norm_to().metric("edp").shape == (2, 5, 6)
+
+
+# ---------------------------------------------------------------------------
+# CLI: bit-for-bit reproduction + serve mode
+# ---------------------------------------------------------------------------
+
+
+def _csv_rows(path):
+    with open(path) as f:
+        return list(csv.DictReader(f))
+
+
+def _assert_csv_matches_rows(csv_path, rows):
+    got = _csv_rows(csv_path)
+    assert len(got) == len(rows)
+    for parsed, ref in zip(got, rows):
+        assert parsed.keys() == ref.keys()
+        for k, v in ref.items():
+            if isinstance(v, float):
+                assert float(parsed[k]) == v, k     # exact, not approx
+            else:
+                assert parsed[k] == str(v), k
+
+
+@pytest.mark.parametrize("golden,pyspec", [
+    ("isocap.json", lambda: isocap.spec()),
+    ("dtco.json", lambda: dtco.spec()),
+    ("lm_nvm.json", lambda: lm_nvm.spec()),
+])
+def test_cli_reproduces_python_pipeline_bit_for_bit(golden, pyspec,
+                                                    tmp_path):
+    out = tmp_path / "rows.csv"
+    sweep_cli.main(["run", spec_path(golden), "--csv", str(out)])
+    _assert_csv_matches_rows(out, sweep.run(pyspec()).rows())
+
+
+def test_cli_stdout_and_stdin(tmp_path, capsys, monkeypatch):
+    text = open(spec_path("isocap.json")).read()
+    monkeypatch.setattr("sys.stdin", io.StringIO(text))
+    sweep_cli.main(["run", "-", "--no-norm"])
+    outerr = capsys.readouterr()
+    header = outerr.out.splitlines()[0]
+    assert header.startswith("platform,workload,batch,stage,mem")
+    assert "_x" not in header
+
+
+def test_serve_answers_and_survives_bad_requests():
+    doc = json.load(open(spec_path("isocap.json")))
+    requests = [
+        json.dumps(doc),
+        json.dumps({"spec": doc, "want": ["rows", "pareto"]}),
+        "{not json",
+        json.dumps({"spec": {"schema": "bogus"}}),
+        json.dumps({"spec": doc, "want": ["everything"]}),
+    ]
+    out = io.StringIO()
+    served = sweep_cli.serve(io.StringIO("\n".join(requests) + "\n"), out)
+    resp = [json.loads(line) for line in out.getvalue().splitlines()]
+    assert served == len(requests)
+    assert [r["ok"] for r in resp] == [True, True, False, False, False]
+    assert resp[0]["summary"]["gtx-1080ti"]["sot"]["edp_reduction_max"] > 1
+    rows = resp[1]["rows"]
+    assert len(rows) == len(sweep.run(isocap.spec()).rows())
+    json.dumps(resp)  # every response is JSON-serializable end to end
+
+
+# ---------------------------------------------------------------------------
+# Row serialization: stable group labels, CSV round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_group_label_stability():
+    assert sweep.group_label(3.0) == "3"
+    assert sweep.group_label(0) == "0"
+    assert sweep.group_label(1.5) == "1.5"
+    assert sweep.group_label(("7nm-scaled", 3.0)) == "7nm-scaled/3"
+    assert sweep.group_label("iso") == "iso"
+
+
+@pytest.fixture(scope="module")
+def dtco_result():
+    return sweep.run(dtco.spec(nodes=(TECH_16NM, TECH_7NM)))
+
+
+def test_rows_group_column_is_string(dtco_result):
+    groups = {r["group"] for r in dtco_result.rows()}
+    assert groups == {"16nm-finfet/3", "7nm-scaled/3"}
+    single = sweep.run(isocap.spec())
+    assert {r["group"] for r in single.rows()} == {"3"}
+
+
+def test_csv_round_trip_pins_group_labels(dtco_result, tmp_path):
+    path = tmp_path / "dtco.csv"
+    dtco_result.to_csv(str(path), exact=True)
+    parsed = _csv_rows(path)
+    assert len(parsed) == len(dtco_result.rows())
+    for got, ref in zip(parsed, dtco_result.rows()):
+        assert got["group"] == ref["group"]
+        assert "(" not in got["group"]          # no repr'd tuples
+        assert float(got["edp_js"]) == ref["edp_js"]   # exact round-trip
+
+
+# ---------------------------------------------------------------------------
+# Query surface: filter / select
+# ---------------------------------------------------------------------------
+
+
+def test_filter_on_labeled_axes(dtco_result):
+    view = dtco_result.filter(platform="gtx-1080ti", workload="alexnet",
+                              stage="train", mem=("stt", "sot"),
+                              node="7nm-scaled")
+    assert len(view) == 2
+    rows = view.rows()
+    assert {r["mem"] for r in rows} == {"stt", "sot"}
+    assert all(r["node"] == "7nm-scaled" and r["stage"] == "train"
+               for r in rows)
+    # chaining narrows further; TechNode values accepted for node
+    assert len(view.filter(mem="stt")) == 1
+    assert len(dtco_result.filter(node=TECH_7NM).design_ids) == 3
+    # normalized values are those of the full result (baseline outside
+    # the view still applies)
+    full = {(r["mem"], r["node"]): r["edp_x"]
+            for r in dtco_result.rows()
+            if r["workload"] == "alexnet" and r["stage"] == "train"}
+    for r in rows:
+        assert r["edp_x"] == full[(r["mem"], r["node"])]
+
+
+def test_filter_group_accepts_raw_and_label(dtco_result):
+    """Raw tuple groups match directly (they are labels, not membership
+    collections) and so do their stable string forms."""
+    raw = dtco_result.filter(group=("7nm-scaled", 3.0))
+    label = dtco_result.filter(group="7nm-scaled/3")
+    assert len(raw.design_ids) == 3
+    assert raw.design_ids == label.design_ids
+
+
+def test_filter_predicates_and_errors(dtco_result):
+    big = dtco_result.filter(batch=lambda b: b > 8)
+    assert all(r["batch"] == 64 for r in big.rows())
+    with pytest.raises(ValueError):
+        dtco_result.filter(memory="stt")
+
+
+def test_select(dtco_result):
+    cols = dtco_result.filter(mem="sot", node="7nm-scaled",
+                              workload="alexnet").select(
+        "workload", "mem", "edp_x", include_dram=True)
+    assert len(cols) == 2
+    for workload, mem, edp_x in cols:
+        assert (workload, mem) == ("alexnet", "sot")
+        assert edp_x < 1.0
+    with pytest.raises(ValueError):
+        dtco_result.select("workload", "nope")
+
+
+def test_metric_slice_matches_full(dtco_result):
+    import numpy as np
+    view = dtco_result.filter(mem="stt")
+    full = dtco_result.metric("energy")
+    ids = view.design_ids
+    assert np.array_equal(view.metric("energy"), full[:, :, list(ids)])
