@@ -144,6 +144,9 @@ def run() -> dict:
     with open(JSON_PATH, "w") as f:
         json.dump(result, f, indent=2)
     return {"rows": [result],
+            "bench": {"loop_s": loop_s, "batched_s": batched_s,
+                      "speedup_x": result["speedup_x"],
+                      "parity_max_rel_err": worst},
             "derived": (f"loop={loop_s*1e3:.0f}ms,"
                         f"batched={batched_s*1e3:.0f}ms,"
                         f"speedup={result['speedup_x']:.1f}x,"

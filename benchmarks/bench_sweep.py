@@ -170,6 +170,10 @@ def run(quick: bool = False) -> dict:
     with open(JSON_PATH, "w") as f:
         json.dump(result, f, indent=2)
     return {"rows": [result],
+            "bench": {"lm_loop_s": lm_loop_s, "lm_batched_s": lm_batched_s,
+                      "lm_speedup_x": result["lm_speedup_x"],
+                      "e2e_s": e2e_s,
+                      "parity_max_rel_err": worst},
             "derived": (f"lm_loop={lm_loop_s*1e3:.1f}ms,"
                         f"lm_batched={lm_batched_s*1e3:.1f}ms,"
                         f"speedup={result['lm_speedup_x']:.1f}x,"

@@ -4,6 +4,14 @@ Prints ``name,us_per_call,derived`` CSV (derived = the reproduced headline
 quantities vs the paper's values) and writes detailed per-row CSVs to
 runs/benchmarks/.
 
+Every module run also **appends** one timestamped JSONL entry to
+``benchmarks/BENCH_history.jsonl`` (schema ``deepnvm.bench/1``): the
+perf-bench modules used to overwrite their ``BENCH_*.json`` with a single
+latest sample, so the cross-PR perf trajectory was never recorded.  The
+per-module headline metrics come from the optional ``bench`` key of a
+module's ``run()`` result; modules without one still get their wall-clock
+tracked.
+
 ``--only MODULE`` (repeatable, comma-separated) restricts the run — the
 CI benchmark-smoke job runs ``--only fig3_4_isocap,lm_nvm,fig_dtco
 --quick`` so analysis-layer regressions fail fast.  ``--quick`` is forwarded to
@@ -16,9 +24,15 @@ from __future__ import annotations
 import argparse
 import importlib
 import inspect
+import json
+import os
 import time
+from datetime import datetime, timezone
 
 from repro.core.report import write_csv
+
+HISTORY_PATH = "benchmarks/BENCH_history.jsonl"
+HISTORY_SCHEMA = "deepnvm.bench/1"
 
 MODULES = (
     "table1_bitcell",
@@ -33,7 +47,27 @@ MODULES = (
     "bench_engine",
     "bench_workload_engine",
     "bench_sweep",
+    "bench_shard",
 )
+
+
+def append_history(name: str, us_per_call: float, result: dict,
+                   quick: bool, path: str = HISTORY_PATH) -> dict:
+    """One appended trajectory entry per module run.  The schema is
+    stable: fixed envelope keys, module-specific numbers confined to
+    ``metrics`` (the module's ``bench`` dict)."""
+    entry = {
+        "schema": HISTORY_SCHEMA,
+        "ts": datetime.now(timezone.utc).isoformat(timespec="seconds"),
+        "module": name,
+        "quick": quick,
+        "us_per_call": round(us_per_call, 1),
+        "metrics": result.get("bench", {}),
+    }
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "a") as f:
+        f.write(json.dumps(entry, sort_keys=True) + "\n")
+    return entry
 
 
 def select(only: list[str] | None) -> tuple[str, ...]:
@@ -66,6 +100,7 @@ def main(argv: list[str] | None = None) -> None:
         dt_us = (time.perf_counter() - t0) * 1e6
         derived = result.get("derived", "")
         print(f'{name},{dt_us:.0f},"{derived}"')
+        append_history(name, dt_us, result, args.quick)
         if result.get("rows"):
             write_csv(f"runs/benchmarks/{name}.csv", result["rows"])
         if result.get("ppa"):

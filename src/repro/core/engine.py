@@ -350,6 +350,47 @@ class DesignTable:
         """[c] area vector — org-independent, so no tuning required."""
         return self.area_mm2[self._node_index(node), self.mems.index(mem)]
 
+    # -- per-chunk slicing (sharded sweeps) --------------------------------
+
+    def subset(self, mems: tuple[str, ...] | None = None,
+               capacities_bytes: tuple[int, ...] | None = None,
+               nodes: tuple[TechNode, ...] | None = None) -> DesignTable:
+        """Slice a sub-table along the node/mem/capacity axes without
+        re-evaluating the circuit sweep — the per-chunk design table of a
+        sharded mega-sweep.  Algorithm-1 winners already memoized on this
+        table are carried over (remapped to the child's node indices), so
+        chunk lowering never re-runs a tuning the full table has done.
+        """
+        nodes = tuple(nodes) if nodes is not None else self.nodes
+        mems = tuple(mems) if mems is not None else self.mems
+        caps = tuple(int(c) for c in capacities_bytes) \
+            if capacities_bytes is not None else self.capacities_bytes
+        try:
+            ni = [self.nodes.index(nd) for nd in nodes]
+            mi = [self.mems.index(m) for m in mems]
+            ci = [self.capacities_bytes.index(c) for c in caps]
+        except ValueError as e:
+            raise ValueError(f"subset axis not in table: {e}") from None
+        sel3 = np.ix_(ni, mi, ci)
+        child = DesignTable(
+            nodes=nodes, mems=mems, capacities_bytes=caps,
+            read_latency_s=self.read_latency_s[sel3],
+            write_latency_s=self.write_latency_s[sel3],
+            read_energy_j=self.read_energy_j[sel3],
+            write_energy_j=self.write_energy_j[sel3],
+            leakage_w=self.leakage_w[sel3],
+            area_mm2=self.area_mm2[sel3],
+            valid=self.valid[ci],
+        )
+        # carry over Algorithm-1 winners (org indices are axis-invariant:
+        # the org grid and the per-capacity valid mask are shared)
+        node_remap = {old: new for new, old in enumerate(ni)}
+        child._tuned_memo.update(
+            {(node_remap[n], mem, cap): org
+             for (n, mem, cap), org in self._tuned_memo.items()
+             if n in node_remap and mem in mems and cap in caps})
+        return child
+
 
 def _as_nodes(nodes) -> tuple[TechNode, ...]:
     """Normalize a single TechNode or a sequence of them to a tuple."""

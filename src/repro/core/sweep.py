@@ -225,8 +225,8 @@ class SweepSpec:
         if len(set(self.designs)) != len(self.designs):
             raise ValueError(f"{self.name}: duplicate design points")
 
-    def run(self) -> SweepResult:
-        return run(self)
+    def run(self, plan: ShardPlan | None = None) -> SweepResult:
+        return run(self, plan)
 
 
 # ---------------------------------------------------------------------------
@@ -367,8 +367,8 @@ class SymbolicSweepSpec:
             platforms=tuple(tech.platform(p) for p in self.platforms),
             baseline_mem=self.baseline_mem)
 
-    def run(self) -> SweepResult:
-        return self.resolve().run()
+    def run(self, plan: ShardPlan | None = None) -> SweepResult:
+        return self.resolve().run(plan)
 
     # -- (de)serialization -------------------------------------------------
 
@@ -490,17 +490,272 @@ def _run_cached(spec: SweepSpec) -> SweepResult:
                        tables=tables)
 
 
-def run(spec: SweepSpec) -> SweepResult:
-    """Lower and evaluate a spec: exactly one ``engine.design_table`` call
-    plus one ``workload_engine.evaluate_platforms`` call.  Memoized per
-    spec, so equal specs share one SweepResult object."""
+def run(spec: SweepSpec, plan: ShardPlan | None = None) -> SweepResult:
+    """Lower and evaluate a spec.
+
+    Without a plan: exactly one ``engine.design_table`` call plus one
+    ``workload_engine.evaluate_platforms`` call, memoized per spec so
+    equal specs share one SweepResult object.
+
+    With a :class:`ShardPlan`: the chunked/sharded lowering —
+    ``run_sharded(spec, plan)`` — which streams partial results through
+    ``SweepResult.merge`` instead of materializing one mega-tensor (and
+    is deliberately *not* memoized: mega-results are too large to pin)."""
+    if plan is not None:
+        return run_sharded(spec, plan)
     return _run_cached(spec)
+
+
+def n_cells(spec: SweepSpec) -> int:
+    """Evaluated cells of a spec: platforms x scenarios x designs."""
+    return len(spec.platforms) * len(spec.scenarios) * len(spec.designs)
 
 
 def clear_cache() -> None:
     """Drop memoized sweep results (benchmark reruns; the engine-layer
     caches are cleared separately via their own hooks)."""
     _run_cached.cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# Sharded lowering: ShardPlan -> chunks -> streaming merge
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """How to split a sweep into independently evaluated chunks.
+
+    ``scenario_chunk`` / ``design_chunk`` bound the chunk extent along
+    each axis (None = don't split that axis).  ``devices`` > 0 additionally
+    shard_maps same-shaped chunk groups over a 1-D device mesh
+    (``distributed.sharding.sweep_mesh``); None keeps chunks on the
+    default device.  ``by_width`` orders scenarios by stream count before
+    chunking, so wide outliers (googlenet train: 645 streams) share chunks
+    and the padded-SoA area of the stream tensors stays near-minimal.
+    """
+
+    scenario_chunk: int | None = None
+    design_chunk: int | None = None
+    devices: int | None = None
+    by_width: bool = False
+
+    def __post_init__(self) -> None:
+        for field in ("scenario_chunk", "design_chunk", "devices"):
+            v = getattr(self, field)
+            if v is not None and (not isinstance(v, int) or v < 1):
+                raise ValueError(f"{field} must be a positive int or None,"
+                                 f" got {v!r}")
+
+
+def split(spec: SweepSpec, plan: ShardPlan) -> tuple[SweepSpec, ...]:
+    """Split a spec into the plan's grid of sub-specs: every (scenario
+    block) x (design block) becomes one independent chunk spec sharing the
+    parent's platforms and baseline.  The union of chunk cells tiles the
+    parent's cross product exactly once (``SweepResult.merge`` validates
+    this on reassembly)."""
+    sc = plan.scenario_chunk or len(spec.scenarios)
+    dc = plan.design_chunk or len(spec.designs)
+    s_order = sorted(range(len(spec.scenarios)),
+                     key=lambda i: -len(spec.scenarios[i].streams)) \
+        if plan.by_width else list(range(len(spec.scenarios)))
+    s_blocks = [tuple(s_order[i:i + sc])
+                for i in range(0, len(s_order), sc)]
+    d_blocks = [tuple(range(j, min(j + dc, len(spec.designs))))
+                for j in range(0, len(spec.designs), dc)]
+    return tuple(
+        SweepSpec(name=f"{spec.name}#{si}.{di}",
+                  scenarios=tuple(spec.scenarios[i] for i in s_block),
+                  designs=tuple(spec.designs[j] for j in d_block),
+                  platforms=spec.platforms,
+                  baseline_mem=spec.baseline_mem)
+        for si, s_block in enumerate(s_blocks)
+        for di, d_block in enumerate(d_blocks))
+
+
+def _chunk_result(sub: SweepSpec, table: engine.DesignTable,
+                  design_of: Mapping[DesignPoint, CacheDesign],
+                  tables: tuple[workload_engine.WorkloadTable, ...] | None
+                  = None) -> SweepResult:
+    designs = tuple(design_of[p] for p in sub.designs)
+    if tables is None:
+        tables = workload_engine.evaluate_chunk(sub.scenarios, designs,
+                                                sub.platforms)
+    sub_table = table.subset(
+        mems=tuple(dict.fromkeys(p.mem for p in sub.designs)),
+        capacities_bytes=tuple(dict.fromkeys(p.capacity_bytes
+                                             for p in sub.designs)),
+        nodes=tuple(dict.fromkeys(p.node for p in sub.designs)))
+    return SweepResult(spec=sub, design_table=sub_table, designs=designs,
+                       tables=tables)
+
+
+def iter_shards(spec: SweepSpec, plan: ShardPlan):
+    """Evaluate a spec chunk by chunk, yielding one partial SweepResult
+    per chunk — the streaming form of ``run_sharded``.
+
+    The circuit layer is lowered **once** up front (one memoized
+    ``engine.design_table`` + Algorithm-1 tuning over the full design
+    axis); each chunk then folds its own scenarios x designs block through
+    an uncached, chunk-packed ``workload_engine`` call, so peak memory is
+    bounded by one chunk's stream tensors plus the partial results.  With
+    ``plan.devices``, same-shaped chunks are grouped and shard_mapped over
+    the sweep mesh, ``devices`` chunks at a time.
+    """
+    table, designs = lower_designs(spec.designs)
+    design_of = dict(zip(spec.designs, designs))
+    subs = split(spec, plan)
+    if plan.devices is None:
+        for sub in subs:
+            yield _chunk_result(sub, table, design_of)
+        return
+    from repro.distributed.sharding import sweep_mesh
+    mesh = sweep_mesh(plan.devices)
+    g = mesh.devices.size
+    groups: dict[tuple[int, int, int], list[SweepSpec]] = {}
+    for sub in subs:
+        sig = (len(sub.scenarios), len(sub.designs),
+               workload_engine.pad_width(max(len(s.streams)
+                                             for s in sub.scenarios)))
+        groups.setdefault(sig, []).append(sub)
+    for members in groups.values():
+        full = len(members) - len(members) % g
+        for i in range(0, full, g):
+            batch = members[i:i + g]
+            tables_list = workload_engine.evaluate_chunk_group(
+                [b.scenarios for b in batch],
+                [[design_of[p] for p in b.designs] for b in batch],
+                spec.platforms, mesh)
+            for sub, tabs in zip(batch, tables_list):
+                yield _chunk_result(sub, table, design_of, tabs)
+        for sub in members[full:]:   # ragged tail: plain jit path
+            yield _chunk_result(sub, table, design_of)
+
+
+def run_sharded(spec: SweepSpec, plan: ShardPlan,
+                progress=None) -> SweepResult:
+    """Chunked/sharded evaluation: stream every chunk of ``split(spec,
+    plan)`` through the order-invariant merge.  ``progress(i, total,
+    part)`` is called per completed chunk (the CLI's stderr ticker).
+    Merged output is pinned to the unsharded path at <= 1e-12 (chunk
+    packing may pad reductions differently, so the last ulps can move)."""
+    total = len(split(spec, plan))
+
+    def parts():
+        for i, part in enumerate(iter_shards(spec, plan)):
+            if progress is not None:
+                progress(i + 1, total, part)
+            yield part
+
+    return merge_results(parts(), spec=spec)
+
+
+# -- merge: order-invariant reassembly of partial results -------------------
+
+_SHARED_S = ("l2_read_tx", "l2_write_tx")
+_SHARED_SD = ("dram_tx", "dyn_read_j", "dyn_write_j")
+
+
+def _scenario_key(stats: TrafficStats) -> tuple[str, int, bool]:
+    return (stats.workload, stats.batch, stats.training)
+
+
+def _design_sort_key(p: DesignPoint):
+    return (p.mem, p.capacity_bytes, p.node.name, group_label(p.group))
+
+
+def merge_results(parts: Iterable[SweepResult],
+                  spec: SweepSpec | None = None) -> SweepResult:
+    """Reassemble partial SweepResults into one result.
+
+    The parts' (scenario x design) blocks must tile the merged cross
+    product exactly — overlapping cells raise immediately, missing cells
+    raise at the end — and all parts must agree on platforms and baseline.
+    With ``spec``, axes follow the spec's order and parts are **streamed**
+    into preallocated tensors (consumed-and-dropped, the bounded-memory
+    path ``run_sharded`` uses); without it, parts are collected first and
+    the merged axes take a canonical sorted order, which is what makes the
+    merge order-invariant and associative (any grouping of parts whose
+    intermediate unions stay rectangular merges to the identical result).
+    """
+    if spec is None:
+        parts = list(parts)
+        if not parts:
+            raise ValueError("merge needs at least one partial result")
+        scen_of: dict[tuple, TrafficStats] = {}
+        points: set[DesignPoint] = set()
+        for part in parts:
+            for s in part.spec.scenarios:
+                scen_of.setdefault(_scenario_key(s), s)
+            points.update(part.spec.designs)
+        spec = SweepSpec(
+            name=parts[0].spec.name.partition("#")[0],
+            scenarios=tuple(scen_of[k] for k in sorted(scen_of)),
+            designs=tuple(sorted(points, key=_design_sort_key)),
+            platforms=parts[0].spec.platforms,
+            baseline_mem=parts[0].spec.baseline_mem)
+    s_index = {_scenario_key(s): i for i, s in enumerate(spec.scenarios)}
+    d_index = {p: j for j, p in enumerate(spec.designs)}
+    n_p, n_s, n_d = (len(spec.platforms), len(spec.scenarios),
+                     len(spec.designs))
+    cov = np.zeros((n_s, n_d), dtype=np.int8)
+    shared_s = {f: np.zeros(n_s) for f in _SHARED_S}
+    shared_sd = {f: np.zeros((n_s, n_d)) for f in _SHARED_SD}
+    platdep = {f: np.zeros((n_p, n_s, n_d))
+               for f in workload_engine._PLATFORM_DEPENDENT}
+    designs: list[CacheDesign | None] = [None] * n_d
+    got_any = False
+    for part in parts:
+        got_any = True
+        if part.spec.platforms != spec.platforms:
+            raise ValueError(
+                f"chunk {part.spec.name!r} platforms differ from the "
+                "merge target's")
+        if part.spec.baseline_mem != spec.baseline_mem:
+            raise ValueError(
+                f"chunk {part.spec.name!r} baseline_mem differs from the "
+                "merge target's")
+        try:
+            srows = [s_index[k] for k in part.scenario_labels]
+            dcols = [d_index[p] for p in part.spec.designs]
+        except KeyError as e:
+            raise ValueError(f"chunk {part.spec.name!r} carries an axis "
+                             f"label outside the merge target: {e}") \
+                from None
+        block = np.ix_(srows, dcols)
+        if cov[block].any():
+            raise ValueError(
+                f"overlapping chunks: {part.spec.name!r} re-covers "
+                "already-merged (scenario, design) cells")
+        cov[block] = 1
+        for j, d in zip(dcols, part.designs):
+            designs[j] = d
+        t0 = part.tables[0]
+        for f in _SHARED_S:
+            shared_s[f][srows] = getattr(t0, f)
+        for f in _SHARED_SD:
+            shared_sd[f][block] = getattr(t0, f)
+        for pi in range(n_p):
+            for f in workload_engine._PLATFORM_DEPENDENT:
+                platdep[f][pi][block] = getattr(part.tables[pi], f)
+    if not got_any:
+        raise ValueError("merge needs at least one partial result")
+    if not cov.all():
+        missing = int((cov == 0).sum())
+        raise ValueError(
+            f"merged chunks do not tile the sweep: {missing} of "
+            f"{n_s * n_d} (scenario, design) cells uncovered")
+    table, _ = lower_designs(spec.designs)
+    keys = tuple(_scenario_key(s) for s in spec.scenarios)
+    tables = tuple(
+        workload_engine.WorkloadTable(
+            scenarios=keys, designs=tuple(designs), platform=p,
+            **shared_s, **shared_sd,
+            **{f: platdep[f][pi]
+               for f in workload_engine._PLATFORM_DEPENDENT})
+        for pi, p in enumerate(spec.platforms))
+    return SweepResult(spec=spec, design_table=table,
+                       designs=tuple(designs), tables=tables)
 
 
 # ---------------------------------------------------------------------------
@@ -521,6 +776,13 @@ class SweepResult:
     design_table: engine.DesignTable
     designs: tuple[CacheDesign, ...]
     tables: tuple[workload_engine.WorkloadTable, ...]
+
+    @classmethod
+    def merge(cls, parts: Iterable[SweepResult],
+              spec: SweepSpec | None = None) -> SweepResult:
+        """Order-invariant reassembly of disjoint partial results — see
+        :func:`merge_results`."""
+        return merge_results(parts, spec=spec)
 
     # -- labeled axes ------------------------------------------------------
 

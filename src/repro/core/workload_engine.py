@@ -96,10 +96,40 @@ class StreamBatch:
     macs: np.ndarray            # [s] float64
 
 
-def pack(stats_seq: Sequence[TrafficStats]) -> StreamBatch:
-    """Pack scenarios into padded [scenario, stream] tensors."""
+def pad_width(k: int) -> int:
+    """Pack-width bucket: the next power of two >= k (minimum 8).
+
+    The chunked sweep path pads each chunk to a bucket instead of its
+    exact stream-count maximum, so chunks with nearby widths share one
+    compiled fold kernel; relative padding waste stays < 2x while the
+    number of distinct kernel shapes stays O(log max_k)."""
+    if k < 1:
+        raise ValueError("pad_width needs k >= 1")
+    w = 8
+    while w < k:
+        w *= 2
+    return w
+
+
+def pack(stats_seq: Sequence[TrafficStats],
+         width: int | None = None) -> StreamBatch:
+    """Pack scenarios into padded [scenario, stream] tensors.
+
+    ``width`` overrides the padded stream-axis size (default: the max
+    stream count across *these* scenarios).  The sharded sweep path packs
+    per chunk — so one outlier scenario (e.g. googlenet train, 645
+    streams) widens only its own chunk, not every chunk of the sweep; a
+    global pack pads every scenario row to the global max and is the
+    memory blowup that makes mixed mega-specs OOM earlier than cell count
+    alone predicts.  Padding rows carry zero bytes, infinite reuse
+    distance, and a False mask, so any width gives the same fold result.
+    """
     stats_seq = tuple(stats_seq)
     k = max(len(s.streams) for s in stats_seq)
+    if width is not None:
+        if width < k:
+            raise ValueError(f"width {width} < max stream count {k}")
+        k = width
     n = len(stats_seq)
     bytes_total = np.zeros((n, k), dtype=np.float64)
     is_write = np.zeros((n, k), dtype=bool)
@@ -142,8 +172,7 @@ def _platform_vector(platform: Platform) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
-@jax.jit
-def _miss_tx_kernel(bytes_total, rd, visible, caps):
+def _miss_tx(bytes_total, rd, visible, caps):
     """[s, c] DRAM transactions — TrafficStats.dram_tx's fold, batched.
 
     Each stream misses with probability (RD / (RD + C_eff))^MISS_CURVE_P
@@ -157,9 +186,11 @@ def _miss_tx_kernel(bytes_total, rd, visible, caps):
     return jnp.where(visible[:, None, :], tx, 0.0).sum(axis=2)
 
 
-@jax.jit
-def _fold_kernel(bytes_total, is_write, rd, visible, mask, macs,
-                 rl, wl, re_, we_, leak, caps, pmat):
+_miss_tx_kernel = jax.jit(_miss_tx)
+
+
+def _fold(bytes_total, is_write, rd, visible, mask, macs,
+          rl, wl, re_, we_, leak, caps, pmat):
     """The full [platform] x [scenario] x [design] workload fold.
 
     Streams [s, k], designs [d], platforms [p, 4] -> platform-dependent
@@ -174,7 +205,7 @@ def _fold_kernel(bytes_total, is_write, rd, visible, mask, macs,
     bt = jnp.where(mask, bytes_total, 0.0)
     read_tx = jnp.where(is_write, 0.0, bt).sum(axis=1) / LINE_BYTES   # [s]
     write_tx = jnp.where(is_write, bt, 0.0).sum(axis=1) / LINE_BYTES
-    dram_tx = _miss_tx_kernel(bt, rd, visible & mask, caps)           # [s, d]
+    dram_tx = _miss_tx(bt, rd, visible & mask, caps)                  # [s, d]
 
     t_compute = macs[None, :, None] * 2.0 \
         / (peak_flops * COMPUTE_EFFICIENCY)                           # [p, s, 1]
@@ -194,6 +225,9 @@ def _fold_kernel(bytes_total, is_write, rd, visible, mask, macs,
         leak_nodram_j=leak[None, None, :] * runtime_nodram,
         dram_j=(dram_tx * LINE_BYTES)[None] * dram_epb,
     )
+
+
+_fold_kernel = jax.jit(_fold)
 
 
 # ---------------------------------------------------------------------------
@@ -318,6 +352,18 @@ _PLATFORM_DEPENDENT = ("runtime_s", "runtime_nodram_s", "leak_j",
                        "leak_nodram_j", "dram_j")
 
 
+def _tables_from(out: dict, keys, designs, platforms,
+                 ) -> tuple[WorkloadTable, ...]:
+    """One WorkloadTable view per platform from the fold's output dict."""
+    out = {k: np.asarray(v) for k, v in out.items()}
+    shared = {k: v for k, v in out.items() if k not in _PLATFORM_DEPENDENT}
+    return tuple(
+        WorkloadTable(scenarios=keys, designs=designs, platform=p,
+                      **shared,
+                      **{k: out[k][i] for k in _PLATFORM_DEPENDENT})
+        for i, p in enumerate(platforms))
+
+
 @functools.lru_cache(maxsize=None)
 def _evaluate_cached(stats_seq: tuple[TrafficStats, ...],
                      designs: tuple[CacheDesign, ...],
@@ -331,13 +377,7 @@ def _evaluate_cached(stats_seq: tuple[TrafficStats, ...],
                            batch.reuse_distance, batch.dram_visible,
                            batch.mask, batch.macs,
                            rl, wl, re_, we_, leak, caps, pmat)
-    out = {k: np.asarray(v) for k, v in out.items()}
-    shared = {k: v for k, v in out.items() if k not in _PLATFORM_DEPENDENT}
-    return tuple(
-        WorkloadTable(scenarios=batch.keys, designs=designs, platform=p,
-                      **shared,
-                      **{k: out[k][i] for k in _PLATFORM_DEPENDENT})
-        for i, p in enumerate(platforms))
+    return _tables_from(out, batch.keys, designs, platforms)
 
 
 def evaluate(stats_seq: Sequence[TrafficStats],
@@ -358,6 +398,97 @@ def evaluate_platforms(stats_seq: Sequence[TrafficStats],
     platform (platform-independent tensors are shared between views)."""
     return _evaluate_cached(tuple(stats_seq), tuple(designs),
                             tuple(platforms))
+
+
+# ---------------------------------------------------------------------------
+# Chunk-aware evaluation (sharded mega-sweeps, core/sweep.py ShardPlan)
+# ---------------------------------------------------------------------------
+
+
+def evaluate_chunk(stats_seq: Sequence[TrafficStats],
+                   designs: Sequence[CacheDesign],
+                   platforms: Sequence[Platform] = (GTX_1080TI,),
+                   width: int | None = None,
+                   ) -> tuple[WorkloadTable, ...]:
+    """One chunk of a sharded sweep: like ``evaluate_platforms`` but
+    deliberately **uncached** — a mega-sweep evaluates thousands of chunks
+    and pinning every chunk's tensors in the lru memo would unbound peak
+    memory — and packed to the chunk's own (bucketed) stream width, so an
+    outlier-wide scenario inflates only the chunk that contains it."""
+    stats_seq = tuple(stats_seq)
+    designs = tuple(designs)
+    if width is None:
+        width = pad_width(max(len(s.streams) for s in stats_seq))
+    batch = pack(stats_seq, width=width)
+    rl, wl, re_, we_, leak, caps = _design_vectors(designs)
+    pmat = np.stack([_platform_vector(p) for p in platforms])
+    with enable_x64():
+        out = _fold_kernel(batch.bytes_total, batch.is_write,
+                           batch.reuse_distance, batch.dram_visible,
+                           batch.mask, batch.macs,
+                           rl, wl, re_, we_, leak, caps, pmat)
+    return _tables_from(out, batch.keys, designs, tuple(platforms))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_fold(mesh):
+    """The fold, shard_mapped over a 1-D sweep mesh: every input carries a
+    leading chunk axis split across devices (the platform matrix is
+    replicated), and each device evaluates its chunk independently — the
+    fold has no cross-chunk terms, so no collectives are needed."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import SWEEP_AXIS
+
+    sh = P(SWEEP_AXIS)
+
+    def body(bt, iw, rd, vis, mask, macs, rl, wl, re_, we_, leak, caps,
+             pmat):
+        out = _fold(bt[0], iw[0], rd[0], vis[0], mask[0], macs[0],
+                    rl[0], wl[0], re_[0], we_[0], leak[0], caps[0], pmat)
+        return {k: v[None] for k, v in out.items()}
+
+    return jax.jit(shard_map(body, mesh=mesh,
+                             in_specs=(sh,) * 12 + (P(),),
+                             out_specs=sh))
+
+
+def evaluate_chunk_group(chunk_stats: Sequence[Sequence[TrafficStats]],
+                         chunk_designs: Sequence[Sequence[CacheDesign]],
+                         platforms: Sequence[Platform],
+                         mesh) -> list[tuple[WorkloadTable, ...]]:
+    """Evaluate one mesh-width group of same-shaped chunks data-parallel
+    across devices via ``shard_map`` (uncached, like ``evaluate_chunk``).
+
+    All chunks must agree on scenario and design counts (the sharded
+    lowering groups them so); the group packs to one shared (bucketed)
+    stream width.  Returns the per-chunk WorkloadTable views, in order.
+    """
+    g = len(chunk_stats)
+    if g != mesh.devices.size:
+        raise ValueError(f"group of {g} chunks on a {mesh.devices.size}"
+                         "-device mesh; groups must fill the mesh")
+    if len({len(cs) for cs in chunk_stats}) != 1 or \
+            len({len(cd) for cd in chunk_designs}) != 1:
+        raise ValueError("chunks in a sharded group must share scenario "
+                         "and design counts")
+    width = pad_width(max(len(s.streams)
+                          for cs in chunk_stats for s in cs))
+    batches = [pack(tuple(cs), width=width) for cs in chunk_stats]
+    stacked = [np.stack([getattr(b, f) for b in batches])
+               for f in ("bytes_total", "is_write", "reuse_distance",
+                         "dram_visible", "mask", "macs")]
+    vecs = [np.stack(v) for v in
+            zip(*(_design_vectors(tuple(cd)) for cd in chunk_designs))]
+    pmat = np.stack([_platform_vector(p) for p in platforms])
+    with enable_x64():
+        out = _sharded_fold(mesh)(*stacked, *vecs, pmat)
+    out = {k: np.asarray(v) for k, v in out.items()}
+    return [_tables_from({k: v[i] for k, v in out.items()},
+                         batches[i].keys, tuple(chunk_designs[i]),
+                         tuple(platforms))
+            for i in range(g)]
 
 
 def dram_tx(stats_seq: Sequence[TrafficStats],

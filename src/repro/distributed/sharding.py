@@ -22,9 +22,36 @@ from __future__ import annotations
 from collections.abc import Sequence
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 MODEL_AXIS = "model"
+
+# ---------------------------------------------------------------------------
+# Sweep-engine mesh (core/sweep.py ShardPlan): a 1-D data-parallel mesh the
+# chunked mega-sweep lowering shard_maps the workload fold over.  Chunks are
+# independent [scenario, design] blocks, so the only axis is the chunk axis.
+# ---------------------------------------------------------------------------
+
+SWEEP_AXIS = "sweep"
+
+
+def sweep_mesh(devices: int | None = None) -> Mesh:
+    """A 1-D mesh of the first ``devices`` local devices (default: all) on
+    the ``sweep`` axis.  On CPU, ``XLA_FLAGS=--xla_force_host_platform_
+    device_count=N`` provides N host devices to shard over."""
+    devs = jax.devices()
+    n = len(devs) if devices is None else int(devices)
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"requested {n} devices; "
+                         f"{len(devs)} available ({devs[0].platform})")
+    return Mesh(np.array(devs[:n]), (SWEEP_AXIS,))
+
+
+def sweep_chunk_spec() -> P:
+    """PartitionSpec of a stacked chunk tensor: the leading chunk axis is
+    split over the sweep mesh, everything else stays local."""
+    return P(SWEEP_AXIS)
 
 
 def dp_axes(mesh: Mesh) -> tuple[str, ...]:

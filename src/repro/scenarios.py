@@ -158,6 +158,38 @@ def names(cnn_stages: Sequence[tuple[bool, int]] = ((False, 4), (True, 64)),
     return cnn + lm
 
 
+# The mega-sweep's CNN batch axis: powers of two through the paper's
+# largest studied batch regime.  15 values x 2 stages x 5 workloads = 150
+# CNN scenarios; with the 32 LM cells and the 4-node x 24-capacity x 3-mem
+# design grid x 2 platforms this crosses 1e5 cells.
+MEGA_BATCHES = tuple(2 ** i for i in range(15))          # 1 .. 16384
+MEGA_CAPACITIES_MB = (0.5, 1, 1.5, 2, 2.5, 3, 4, 5, 6, 8, 10, 12, 16, 20,
+                      24, 28, 32, 40, 48, 56, 64, 72, 80, 96)
+
+
+def mega_spec(quick: bool = False) -> sweep.SweepSpec:
+    """The full DTCO cross product as one spec: every CNN workload x stage
+    x batch, every supported LM (arch x shape) cell, x every (node x
+    capacity x memory) design point x both platforms — the 1e5-cell space
+    the sharded lowering (``sweep.ShardPlan``) exists for.  ``quick``
+    shrinks every axis to a CI-smoke size (a few hundred cells) with the
+    same heterogeneous shape."""
+    from repro.core.tech import NODES, PLATFORMS
+    batches = (4, 64) if quick else MEGA_BATCHES
+    caps = (1.0, 3.0) if quick else MEGA_CAPACITIES_MB
+    nodes = tuple(NODES.values())[:2 if quick else None]
+    cnn = tuple(workload_engine.stats_for(w, b, t)
+                for w in workloads.registry().values()
+                for t in (False, True) for b in batches)
+    lm = lm_scenarios(shapes=("train_4k", "decode_32k") if quick
+                      else LM_SHAPES)
+    return sweep.SweepSpec(
+        name="mega-quick" if quick else "mega",
+        scenarios=cnn + lm,
+        designs=sweep.design_grid(sweep.MEMS, caps, nodes=nodes),
+        platforms=tuple(PLATFORMS.values()))
+
+
 def lm_sweep_spec(capacity_mb: float = LM_CAPACITY_MB,
                   mems: Sequence[str] = sweep.MEMS,
                   platforms: Sequence[Platform] = (TPU_V5E,),

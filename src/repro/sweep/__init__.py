@@ -14,6 +14,7 @@ from repro.core.sweep import (  # noqa: F401
     DesignCorners,
     DesignGrid,
     DesignPoint,
+    ShardPlan,
     SweepResult,
     SweepSpec,
     SweepView,
@@ -22,15 +23,21 @@ from repro.core.sweep import (  # noqa: F401
     design_grid,
     design_name,
     group_label,
+    iter_shards,
     load_spec,
+    merge_results,
+    n_cells,
     parse_design,
     run,
+    run_sharded,
+    split,
     workload_scenarios,
 )
 
 __all__ = [
-    "SCHEMA", "DesignCorners", "DesignGrid", "DesignPoint", "SweepResult",
-    "SweepSpec", "SweepView", "SymbolicSweepSpec", "design_corners",
-    "design_grid", "design_name", "group_label", "load_spec",
-    "parse_design", "run", "workload_scenarios",
+    "SCHEMA", "DesignCorners", "DesignGrid", "DesignPoint", "ShardPlan",
+    "SweepResult", "SweepSpec", "SweepView", "SymbolicSweepSpec",
+    "design_corners", "design_grid", "design_name", "group_label",
+    "iter_shards", "load_spec", "merge_results", "n_cells", "parse_design",
+    "run", "run_sharded", "split", "workload_scenarios",
 ]

@@ -8,22 +8,32 @@
 ``deepnvm.sweepspec/2``) through the registries and evaluates it — exactly
 one circuit-engine call plus one workload-fold call — then writes the
 long-format rows as full-precision CSV (floats repr-round-trip, so a
-JSON-defined sweep reproduces the Python pipeline bit-for-bit).  ``show``
-resolves without evaluating (spec linting).  ``serve`` is the long-lived
-mode: it answers JSONL sweep requests from stdin on stdout, one response
-line per request, with every memoized layer (scenario statistics, design
-tables, Algorithm-1 tunings, fold tables, sweep results) staying warm
-across requests — repeated or overlapping specs cost one evaluation.
+JSON-defined sweep reproduces the Python pipeline bit-for-bit).  With
+``--shard``/``--design-chunk`` (plus ``--devices``/``--by-width``) the
+spec instead takes the chunked/sharded lowering (``core.sweep.ShardPlan``)
+and streams partial results through the order-invariant merge — the path
+for mega-specs too large for one fold.  ``mega`` builds and runs the full
+DTCO cross product (``repro.scenarios.mega_spec``, 1e5+ cells) through
+that path.  ``show`` resolves without evaluating (spec linting).
+``serve`` is the long-lived mode: it answers JSONL sweep requests from
+stdin on stdout, one response line per request, with every memoized layer
+(scenario statistics, design tables, Algorithm-1 tunings, fold tables,
+sweep results) staying warm across requests — repeated or overlapping
+specs cost one evaluation.
 
 A serve request is either a bare spec document or an envelope::
 
     {"spec": {...}, "want": ["rows", "summary", "pareto", "plateaus"],
-     "include_dram": false}
+     "include_dram": false,
+     "shard": {"scenario_chunk": 8, "design_chunk": 32,
+               "devices": null, "by_width": true}}
 
 The response is one JSON object: ``{"ok": true, "name": ..., "axes":
-{...}, "elapsed_ms": ..., <one key per requested view>}`` — or
-``{"ok": false, "error": ...}`` on a bad request (the process keeps
-serving).
+{...}, "cells": ..., "elapsed_ms": ..., <one key per requested view>}`` —
+``cells`` and ``elapsed_ms`` report per-request evaluated-cell count and
+wall-clock (the observability hook the sharded path and the concurrent
+service rely on) — or ``{"ok": false, "error": ...}`` on a bad request
+(the process keeps serving).
 """
 
 from __future__ import annotations
@@ -35,9 +45,10 @@ import time
 from collections.abc import Mapping
 
 from repro.core import report
-from repro.core.sweep import SymbolicSweepSpec
+from repro.core.sweep import ShardPlan, SymbolicSweepSpec, n_cells
 
 WANTS = ("rows", "summary", "pareto", "plateaus")
+SHARD_KEYS = ("scenario_chunk", "design_chunk", "devices", "by_width")
 
 
 def _load(path: str) -> SymbolicSweepSpec:
@@ -52,9 +63,43 @@ def _axes(spec) -> dict:
             "designs": len(spec.designs)}
 
 
+def _plan_of(args: argparse.Namespace) -> ShardPlan | None:
+    if not (args.shard or args.design_chunk or args.devices
+            or args.by_width):
+        return None
+    return ShardPlan(scenario_chunk=args.shard,
+                     design_chunk=args.design_chunk,
+                     devices=args.devices, by_width=args.by_width)
+
+
+def _progress(i: int, total: int, part) -> None:
+    print(f"\r  shard {i}/{total} ({part.spec.name})",
+          end="" if i < total else "\n", file=sys.stderr, flush=True)
+
+
+def _add_shard_flags(p: argparse.ArgumentParser) -> None:
+    p.add_argument("--shard", type=int, metavar="N",
+                   help="sharded lowering: chunk the scenario axis by N")
+    p.add_argument("--design-chunk", type=int, metavar="N",
+                   help="chunk the design axis by N")
+    p.add_argument("--devices", type=int, metavar="N",
+                   help="shard_map chunk groups over N devices (CPU: set "
+                        "XLA_FLAGS=--xla_force_host_platform_device_count)")
+    p.add_argument("--by-width", action="store_true",
+                   help="order scenarios by stream count before chunking "
+                        "(minimizes padded-SoA area per chunk)")
+
+
+def _run_spec(spec, plan: ShardPlan | None):
+    from repro.core import sweep as sweep_mod
+    if plan is None:
+        return sweep_mod.run(spec)
+    return sweep_mod.run_sharded(spec, plan, progress=_progress)
+
+
 def cmd_run(args: argparse.Namespace) -> None:
     sym = _load(args.spec)
-    result = sym.run()
+    result = _run_spec(sym.resolve(), _plan_of(args))
     rows = result.rows(include_norm=not args.no_norm,
                        include_dram=args.include_dram)
     # status lines go to stderr: stdout carries only data (the rows CSV
@@ -77,6 +122,34 @@ def cmd_run(args: argparse.Namespace) -> None:
                          fmt=report.fmt_exact)
         print(f"capacity plateaus -> {args.plateaus}", file=sys.stderr)
     if args.summary:
+        print(json.dumps(result.summary(), indent=2))
+
+
+def cmd_mega(args: argparse.Namespace) -> None:
+    """Build and run the full DTCO cross product through the sharded
+    lowering (default plan: 8-scenario x 32-design chunks, width-sorted —
+    a few thousand cells per chunk, bounded peak memory)."""
+    from repro import scenarios
+    from repro.core.sweep import n_cells as cells_of
+    spec = scenarios.mega_spec(quick=args.quick)
+    # mega is always sharded: unset knobs take chunked defaults (8 x 32,
+    # width-sorted — a few thousand cells per chunk, bounded peak memory)
+    plan = ShardPlan(scenario_chunk=args.shard or 8,
+                     design_chunk=args.design_chunk or 32,
+                     devices=args.devices, by_width=True)
+    print(f"{spec.name}: {cells_of(spec)} cells "
+          f"({len(spec.platforms)} platforms x {len(spec.scenarios)} "
+          f"scenarios x {len(spec.designs)} designs), plan {plan}",
+          file=sys.stderr)
+    t0 = time.perf_counter()
+    result = _run_spec(spec, plan)
+    dt = time.perf_counter() - t0
+    print(f"evaluated in {dt:.1f}s "
+          f"({cells_of(spec) / dt:,.0f} cells/s)", file=sys.stderr)
+    if args.csv:
+        report.write_csv(args.csv, result.rows(), fmt=report.fmt_exact)
+        print(f"rows -> {args.csv}", file=sys.stderr)
+    if args.summary or not args.csv:
         print(json.dumps(result.summary(), indent=2))
 
 
@@ -109,11 +182,21 @@ def answer(request: Mapping | str) -> dict:
                              f"available: {list(WANTS)}")
         include_dram = bool(req.get("include_dram", False)) if envelope \
             else False
+        plan = None
+        if envelope and req.get("shard") is not None:
+            shard = dict(req["shard"])
+            unknown = set(shard) - set(SHARD_KEYS)
+            if unknown:
+                raise ValueError(f"unknown shard keys {sorted(unknown)}; "
+                                 f"available: {list(SHARD_KEYS)}")
+            plan = ShardPlan(**shard)
         sym = SymbolicSweepSpec.from_json(doc)
+        spec = sym.resolve()
         t0 = time.perf_counter()
-        result = sym.run()
+        result = spec.run(plan)
         resp: dict = {"ok": True, "name": sym.name,
                       "axes": _axes(result.spec),
+                      "cells": n_cells(result.spec),
                       "elapsed_ms": (time.perf_counter() - t0) * 1e3}
         if "rows" in want:
             resp["rows"] = result.rows(include_dram=include_dram)
@@ -164,7 +247,19 @@ def main(argv: list[str] | None = None) -> None:
                        help="omit the normalized (*_x) columns")
     run_p.add_argument("--include-dram", action="store_true",
                        help="include DRAM terms in energy/EDP columns")
+    _add_shard_flags(run_p)
     run_p.set_defaults(func=cmd_run)
+
+    mega_p = sub.add_parser(
+        "mega", help="run the full 1e5-cell DTCO cross product (sharded)")
+    mega_p.add_argument("--quick", action="store_true",
+                        help="CI-smoke size (a few hundred cells)")
+    mega_p.add_argument("--csv", metavar="PATH",
+                        help="write rows CSV here")
+    mega_p.add_argument("--summary", action="store_true",
+                        help="print the aggregate summary as JSON")
+    _add_shard_flags(mega_p)
+    mega_p.set_defaults(func=cmd_mega)
 
     show_p = sub.add_parser("show", help="resolve a spec without running")
     show_p.add_argument("spec")

@@ -1,0 +1,330 @@
+"""Tests for the sharded mega-sweep lowering (core/sweep.py ShardPlan /
+split / merge, core/workload_engine chunk evaluation, core/engine
+DesignTable.subset, the sweep-mesh path, and the CLI surface).
+
+Families:
+
+  parity     sharded evaluation of every golden spec in specs/ merges to
+             the unsharded result within 1e-12, for two chunk sizes and
+             a permuted chunk order (the acceptance pin);
+  merge      order-invariance, associativity on rectangular groupings,
+             disjointness (overlap raises), coverage (missing raises),
+             axis/platform/baseline mismatch errors;
+  split      exact tiling of the cross product, by_width ordering,
+             ShardPlan validation;
+  pack       per-chunk pad widths (the padding-blowup fix) and width
+             bucketing;
+  subset     DesignTable.subset slicing + Algorithm-1 memo reuse;
+  mesh       shard_map path on a 1-device sweep mesh (multi-device runs
+             live in the CI shard-smoke job under forced host devices);
+  cli        --shard flags, mega --quick, serve cells/shard envelope.
+"""
+
+import io
+import json
+import os
+import random
+
+import numpy as np
+import pytest
+
+from repro import scenarios, sweep_cli
+from repro.core import sweep, workload_engine
+from repro.core.sweep import (ShardPlan, SymbolicSweepSpec, merge_results,
+                              n_cells, run_sharded, split)
+
+SPEC_DIR = os.path.join(os.path.dirname(__file__), "..", "specs")
+GOLDEN = ("isocap.json", "dtco.json", "lm_nvm.json", "mixed_cnn_lm.json")
+REL = 1e-12
+
+_FIELDS = ("l2_read_tx", "l2_write_tx", "dram_tx", "runtime_s",
+           "runtime_nodram_s", "dyn_read_j", "dyn_write_j", "leak_j",
+           "leak_nodram_j", "dram_j")
+
+
+def golden_spec(name: str) -> sweep.SweepSpec:
+    with open(os.path.join(SPEC_DIR, name)) as f:
+        return SymbolicSweepSpec.from_json(f.read()).resolve()
+
+
+def max_rel_err(res: sweep.SweepResult, ref: sweep.SweepResult) -> float:
+    assert res.scenario_labels == ref.scenario_labels
+    assert res.spec.designs == ref.spec.designs
+    assert res.designs == ref.designs
+    worst = 0.0
+    for pi in range(len(ref.spec.platforms)):
+        for f in _FIELDS:
+            a = getattr(res.tables[pi], f)
+            b = getattr(ref.tables[pi], f)
+            worst = max(worst, float(np.max(
+                np.abs(a - b) / np.maximum(np.abs(b), 1e-300))))
+    return worst
+
+
+# ---------------------------------------------------------------------------
+# Acceptance parity: every golden spec, two chunk sizes, permuted order
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", GOLDEN)
+@pytest.mark.parametrize("plan", [
+    ShardPlan(scenario_chunk=3),
+    ShardPlan(scenario_chunk=4, design_chunk=2, by_width=True),
+])
+def test_golden_sharded_parity(name, plan):
+    spec = golden_spec(name)
+    assert max_rel_err(run_sharded(spec, plan), sweep.run(spec)) <= REL
+
+
+@pytest.mark.parametrize("name", GOLDEN)
+def test_golden_permuted_chunk_order(name):
+    spec = golden_spec(name)
+    parts = list(sweep.iter_shards(
+        spec, ShardPlan(scenario_chunk=3, design_chunk=2)))
+    random.Random(name).shuffle(parts)
+    assert max_rel_err(merge_results(iter(parts), spec=spec),
+                       sweep.run(spec)) <= REL
+
+
+# ---------------------------------------------------------------------------
+# merge: order-invariance, associativity, disjointness, coverage
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def dtco_parts():
+    spec = golden_spec("dtco.json")
+    return spec, list(sweep.iter_shards(
+        spec, ShardPlan(scenario_chunk=4, design_chunk=5)))
+
+
+def test_merge_without_spec_is_order_invariant(dtco_parts):
+    spec, parts = dtco_parts
+    ref = merge_results(iter(parts))
+    for seed in range(3):
+        shuffled = parts[:]
+        random.Random(seed).shuffle(shuffled)
+        res = merge_results(iter(shuffled))
+        assert res.spec == ref.spec  # canonical axes, independent of order
+        assert max_rel_err(res, ref) == 0.0
+
+
+def test_merge_associativity_rectangular(dtco_parts):
+    """Merging rectangular sub-groups first, then the groups, equals the
+    flat merge: merge is associative on groupings whose intermediates
+    tile rectangles (split()'s row groups are such a grouping)."""
+    spec, parts = dtco_parts
+    flat = merge_results(iter(parts), spec=spec)
+    # group by scenario block: each group is one full design row strip
+    by_row = {}
+    for p in parts:
+        by_row.setdefault(p.spec.name.split("#")[1].split(".")[0],
+                          []).append(p)
+    strips = [merge_results(iter(g)) for g in by_row.values()]
+    nested = merge_results(iter(strips), spec=spec)
+    assert max_rel_err(nested, flat) == 0.0
+
+
+def test_merge_overlap_raises(dtco_parts):
+    spec, parts = dtco_parts
+    with pytest.raises(ValueError, match="overlap"):
+        merge_results(iter(parts + parts[:1]), spec=spec)
+
+
+def test_merge_missing_raises(dtco_parts):
+    spec, parts = dtco_parts
+    with pytest.raises(ValueError, match="do not tile"):
+        merge_results(iter(parts[:-1]), spec=spec)
+
+
+def test_merge_foreign_axis_raises(dtco_parts):
+    spec, parts = dtco_parts
+    other = golden_spec("lm_nvm.json")
+    alien = next(sweep.iter_shards(other, ShardPlan(scenario_chunk=4)))
+    with pytest.raises(ValueError,
+                       match="outside the merge target|platforms differ"):
+        merge_results(iter(parts[:-1] + [alien]), spec=spec)
+
+
+def test_merge_empty_raises():
+    with pytest.raises(ValueError, match="at least one"):
+        merge_results(iter(()))
+
+
+# ---------------------------------------------------------------------------
+# split / ShardPlan
+# ---------------------------------------------------------------------------
+
+
+def test_split_tiles_exactly():
+    spec = golden_spec("dtco.json")
+    for plan in (ShardPlan(scenario_chunk=3, design_chunk=5),
+                 ShardPlan(design_chunk=7),
+                 ShardPlan(scenario_chunk=1, design_chunk=1)):
+        subs = split(spec, plan)
+        cells = [( (s.workload, s.batch, s.training), d)
+                 for sub in subs
+                 for s in sub.scenarios for d in sub.designs]
+        assert len(cells) == len(set(cells)) \
+            == len(spec.scenarios) * len(spec.designs)
+        assert sum(n_cells(sub) for sub in subs) == n_cells(spec)
+
+
+def test_split_by_width_orders_wide_first():
+    spec = golden_spec("mixed_cnn_lm.json")  # CNN (wide) + LM (6 streams)
+    subs = split(spec, ShardPlan(scenario_chunk=2, by_width=True))
+    widths = [max(len(s.streams) for s in sub.scenarios) for sub in subs]
+    assert widths == sorted(widths, reverse=True)
+
+
+def test_shardplan_validates():
+    with pytest.raises(ValueError, match="scenario_chunk"):
+        ShardPlan(scenario_chunk=0)
+    with pytest.raises(ValueError, match="devices"):
+        ShardPlan(devices=-1)
+
+
+# ---------------------------------------------------------------------------
+# pack width (the padding-blowup fix)
+# ---------------------------------------------------------------------------
+
+
+def test_pad_width_buckets():
+    assert workload_engine.pad_width(1) == 8
+    assert workload_engine.pad_width(8) == 8
+    assert workload_engine.pad_width(9) == 16
+    assert workload_engine.pad_width(645) == 1024
+    with pytest.raises(ValueError):
+        workload_engine.pad_width(0)
+
+
+def test_pack_per_chunk_width():
+    lm = scenarios.lm_scenarios(archs=scenarios.configs.all_archs()[:2],
+                                shapes=("train_4k",))
+    k = max(len(s.streams) for s in lm)
+    assert workload_engine.pack(lm).bytes_total.shape[1] == k
+    bucketed = workload_engine.pack(lm, width=workload_engine.pad_width(k))
+    assert bucketed.bytes_total.shape[1] <= 16  # LM chunks stay narrow
+    with pytest.raises(ValueError):
+        workload_engine.pack(lm, width=2)
+
+
+def test_chunked_width_matches_global(dtco_parts):
+    """Padding is mathematically inert: a chunk evaluated at its own
+    width equals the same rows of the globally-packed fold (within the
+    reduction-reassociation pin)."""
+    spec, _ = dtco_parts
+    ref = sweep.run(spec)
+    sub = split(spec, ShardPlan(scenario_chunk=2))[0]
+    tabs = workload_engine.evaluate_chunk(
+        sub.scenarios, ref.designs, sub.platforms)
+    rows = [ref.scenario_labels.index(k) for k in tabs[0].scenarios]
+    a, b = tabs[0].dram_tx, ref.tables[0].dram_tx[rows]
+    assert float(np.max(np.abs(a - b) / np.maximum(np.abs(b), 1e-300))) \
+        <= REL
+
+
+# ---------------------------------------------------------------------------
+# DesignTable.subset
+# ---------------------------------------------------------------------------
+
+
+def test_design_table_subset_slices_and_memoizes():
+    spec = golden_spec("dtco.json")
+    table, designs = sweep.lower_designs(spec.designs)
+    pts = spec.designs[:4]
+    sub = table.subset(
+        mems=tuple(dict.fromkeys(p.mem for p in pts)),
+        capacities_bytes=tuple(dict.fromkeys(p.capacity_bytes
+                                             for p in pts)),
+        nodes=tuple(dict.fromkeys(p.node for p in pts)))
+    for p, d in zip(spec.designs, designs):
+        if p not in pts:
+            continue
+        # tuned reads agree with the parent table's (memo carried over)
+        assert sub.tuned(p.mem, p.capacity_bytes, node=p.node) == \
+            table.tuned(p.mem, p.capacity_bytes, node=p.node)
+    with pytest.raises(ValueError, match="subset axis"):
+        table.subset(mems=("pcm",))
+
+
+# ---------------------------------------------------------------------------
+# mesh path (1 device here; multi-device in the CI shard-smoke job)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_mesh_single_device_parity():
+    spec = golden_spec("isocap.json")
+    res = run_sharded(spec, ShardPlan(scenario_chunk=2, design_chunk=3,
+                                      devices=1))
+    assert max_rel_err(res, sweep.run(spec)) <= REL
+
+
+def test_sweep_mesh_bounds():
+    from repro.distributed.sharding import sweep_mesh
+    import jax
+    assert sweep_mesh(1).devices.size == 1
+    with pytest.raises(ValueError, match="devices"):
+        sweep_mesh(len(jax.devices()) + 1)
+
+
+# ---------------------------------------------------------------------------
+# mega spec + CLI
+# ---------------------------------------------------------------------------
+
+
+def test_mega_spec_axes():
+    spec = scenarios.mega_spec()
+    assert n_cells(spec) >= 100_000
+    kinds = {("/" in s.workload) for s in spec.scenarios}
+    assert kinds == {True, False}  # heterogeneous: CNN + LM
+    assert len({p.node for p in spec.designs}) >= 2
+    quick = scenarios.mega_spec(quick=True)
+    assert n_cells(quick) < 2_000
+
+
+def test_cli_run_sharded_matches_unsharded(tmp_path, capsys):
+    plain, sharded = tmp_path / "a.csv", tmp_path / "b.csv"
+    path = os.path.join(SPEC_DIR, "isocap.json")
+    sweep_cli.main(["run", path, "--csv", str(plain)])
+    sweep_cli.main(["run", path, "--csv", str(sharded),
+                    "--shard", "3", "--by-width"])
+    a_lines = plain.read_text().splitlines()
+    b_lines = sharded.read_text().splitlines()
+    assert a_lines[0] == b_lines[0] and len(a_lines) == len(b_lines)
+    for a, b in zip(a_lines[1:], b_lines[1:]):
+        for x, y in zip(a.split(","), b.split(",")):
+            try:
+                fx, fy = float(x), float(y)
+            except ValueError:
+                assert x == y  # label columns are exact
+            else:
+                # numeric columns sit within the sharded 1e-12 pin (pad
+                # widths differ, so the last ulps of reductions may move)
+                assert fy == pytest.approx(fx, rel=REL)
+
+
+def test_cli_mega_quick(capsys):
+    sweep_cli.main(["mega", "--quick", "--shard", "10",
+                    "--design-chunk", "6", "--summary"])
+    out = capsys.readouterr()
+    assert "mega-quick" in out.err and "cells/s" in out.err
+    assert json.loads(out.out)  # summary JSON on stdout
+
+
+def test_serve_reports_cells_and_shard():
+    with open(os.path.join(SPEC_DIR, "isocap.json")) as f:
+        doc = json.load(f)
+    req = {"spec": doc, "want": ["summary"],
+           "shard": {"scenario_chunk": 4, "by_width": True}}
+    out = io.StringIO()
+    served = sweep_cli.serve(
+        io.StringIO(json.dumps(req) + "\n" + json.dumps(doc) + "\n"), out)
+    assert served == 2
+    lines = [json.loads(x) for x in out.getvalue().splitlines()]
+    for resp in lines:
+        assert resp["ok"] and resp["cells"] == 30
+        assert resp["elapsed_ms"] > 0
+    bad = sweep_cli.answer(json.dumps(
+        {"spec": doc, "shard": {"bogus": 1}}))
+    assert not bad["ok"] and "shard" in bad["error"]
