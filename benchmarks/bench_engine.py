@@ -26,6 +26,7 @@ from repro.core import engine, scaling, traffic, tuner
 from repro.core.cachemodel import CacheModel
 from repro.core.isocap import INFER_BATCH, TRAIN_BATCH, MEMS
 from repro.core.scaling import CAPACITIES_MB, PPARow, ScalingRow
+from repro.core.tech import TECH_16NM, scaled_node
 from repro.core.workloads import paper_workloads
 
 JSON_PATH = "benchmarks/BENCH_engine.json"  # version-controlled record
@@ -86,6 +87,26 @@ def _clear_engine_caches() -> None:
     tuner._tuned_design_cached.cache_clear()
 
 
+def _node_retrace_count() -> int:
+    """How many extra jit traces a NEW node value costs at fixed shapes.
+
+    The node/periphery parameters are runtime tensor rows of the
+    ``[n, NODE_FIELDS]`` matrix, so after the anchor trace and the
+    scaled-node trace exist for a shape, sweeping any further node must
+    not retrace — this is the property that keeps the cross-node DTCO
+    sweeps one compile, and it is the one a careless "bake the node into
+    the trace as Python floats" refactor would silently break."""
+    caps = (3 * 2**20,)
+    # Prime both traces for this shape: the anchor-periphery trace and
+    # the runtime-periphery trace.
+    engine.sweep(caps, nodes=TECH_16NM)
+    engine.sweep(caps, nodes=scaled_node(13e-9, name="bench-13nm"))
+    base = engine._ppa_kernel._cache_size()
+    for nm in (11.0, 9.0, 8.0):
+        engine.sweep(caps, nodes=scaled_node(nm * 1e-9, name=f"bench-{nm:g}nm"))
+    return engine._ppa_kernel._cache_size() - base
+
+
 def _check_parity(loop_rows, batched_rows, rel=1e-9) -> float:
     assert len(loop_rows) == len(batched_rows)
     worst = 0.0
@@ -129,6 +150,10 @@ def run() -> dict:
     worst = max(_check_parity(loop_ppa, batched_ppa),
                 _check_parity(loop_wl, batched_wl))
 
+    node_retraces = _node_retrace_count()
+    assert node_retraces == 0, \
+        f"new node values must not recompile the kernel ({node_retraces})"
+
     result = dict(
         sweep="scaling.ppa_sweep + scaling.workload_sweep",
         capacities_mb=list(CAPACITIES_MB),
@@ -139,6 +164,7 @@ def run() -> dict:
         speedup_x=loop_s / batched_s,
         speedup_cold_x=loop_s / cold_s,
         parity_max_rel_err=worst,
+        node_retraces=node_retraces,
     )
     os.makedirs(os.path.dirname(JSON_PATH), exist_ok=True)
     with open(JSON_PATH, "w") as f:
@@ -146,11 +172,13 @@ def run() -> dict:
     return {"rows": [result],
             "bench": {"loop_s": loop_s, "batched_s": batched_s,
                       "speedup_x": result["speedup_x"],
-                      "parity_max_rel_err": worst},
+                      "parity_max_rel_err": worst,
+                      "node_retraces": node_retraces},
             "derived": (f"loop={loop_s*1e3:.0f}ms,"
                         f"batched={batched_s*1e3:.0f}ms,"
                         f"speedup={result['speedup_x']:.1f}x,"
-                        f"parity_err={worst:.2e}")}
+                        f"parity_err={worst:.2e},"
+                        f"node_retraces={node_retraces}")}
 
 
 if __name__ == "__main__":

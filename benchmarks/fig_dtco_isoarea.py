@@ -1,0 +1,53 @@
+"""Beyond-paper: cross-node iso-AREA study on the node-aware circuit stack.
+
+The paper's iso-area argument (spend the MRAM density advantage on
+capacity, win on DRAM traffic) taken across technology nodes: at every
+node the SRAM area budget is re-derived from that node's EDAP-tuned
+designs and buys that node's largest-fitting MRAM capacities
+(``isoarea.corners(node=...)``), which only carries signal now that the
+MTJ devices, bitcells, and periphery all project per node
+(tech.*_SCALING_EXPONENTS) — the deliverable of the node-aware refactor.
+
+Derived headline: per-flavor iso-area capacity at both ends of the node
+axis and the widening leakage/EDP gap against same-node SRAM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import dtco
+from repro.core.workloads import paper_workloads
+
+QUICK_WORKLOADS = 2  # first N paper workloads in --quick mode
+
+
+def run(quick: bool = False) -> dict:
+    nodes = (dtco.NODES[0], dtco.NODES[-1]) if quick else dtco.NODES
+    workloads = dict(list(paper_workloads().items())[:QUICK_WORKLOADS]) \
+        if quick else None
+    rows = dtco.isoarea_analyze(workloads=workloads, nodes=nodes)
+    head = dtco.isoarea_headline(rows)
+    last_nm = rows[-1].feature_nm
+    derived = (
+        f"isoarea_cap stt={head['stt']['capacity_mb_first']:g}MB@16nm->"
+        f"{head['stt']['capacity_mb_last']:g}MB@{last_nm:g}nm,"
+        f"sot={head['sot']['capacity_mb_first']:g}MB->"
+        f"{head['sot']['capacity_mb_last']:g}MB,"
+        f"edp_red@{last_nm:g}nm stt={head['stt']['edp_reduction_last']:.2f}"
+        f"x,sot={head['sot']['edp_reduction_last']:.2f}x,"
+        f"sram_leak x{head['sram']['leak_growth']:.2f},"
+        f"{len(nodes)}nodes")
+    bench = {
+        "stt_cap_mb_last": head["stt"]["capacity_mb_last"],
+        "sot_cap_mb_last": head["sot"]["capacity_mb_last"],
+        "stt_edp_reduction_last": head["stt"]["edp_reduction_last"],
+        "sot_edp_reduction_last": head["sot"]["edp_reduction_last"],
+        "sram_leak_growth": head["sram"]["leak_growth"],
+    }
+    return {"rows": [dataclasses.asdict(r) for r in rows],
+            "derived": derived, "bench": bench}
+
+
+if __name__ == "__main__":
+    print(run()["derived"])

@@ -13,7 +13,7 @@ module's ``run()`` result; modules without one still get their wall-clock
 tracked.
 
 ``--only MODULE`` (repeatable, comma-separated) restricts the run — the
-CI benchmark-smoke job runs ``--only fig3_4_isocap,lm_nvm,fig_dtco
+CI benchmark-smoke job runs ``--only fig3_4_isocap,lm_nvm,fig_dtco,fig_dtco_isoarea
 --quick`` so analysis-layer regressions fail fast.  ``--quick`` is forwarded to
 modules whose ``run`` accepts a ``quick`` keyword (reduced reps / arch
 sets); the rest run unchanged.
@@ -43,6 +43,7 @@ MODULES = (
     "fig7_8_isoarea",
     "fig9_10_scaling",
     "fig_dtco",
+    "fig_dtco_isoarea",
     "lm_nvm",
     "bench_engine",
     "bench_workload_engine",

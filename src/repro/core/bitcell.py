@@ -29,7 +29,7 @@ import math
 
 import numpy as np
 
-from repro.core import mtj
+from repro.core import mtj, tech
 from repro.core.tech import TechNode, TECH_16NM
 
 MAX_FINS = 4  # 2-poly-pitch bitcell fin budget ([45] layout formulation)
@@ -46,19 +46,35 @@ ARRAY_FIELDS = (
     "cell_leakage_w",
 )
 
-# Bitcell footprint vs fin count, normalized to the foundry 6T SRAM cell.
-# Linear-in-fins with a per-structure base term ([45]); SOT's shared-bitline
-# structure has the smaller base despite its second device.
+# Bitcell footprint vs fin count, normalized to the foundry 6T SRAM cell,
+# at the 16 nm anchor.  Linear-in-fins with a per-structure base term
+# ([45]); SOT's shared-bitline structure has the smaller base despite its
+# second device.  Across nodes the base term (MTJ pillar + BEOL keep-out,
+# via/metal-pitch limited) shrinks slower than the 6T footprint while the
+# fin term (front-end devices) tracks it — tech.BITCELL_SCALING_EXPONENTS.
 _AREA_BASE = {"stt": 0.10, "sot": 0.05}
 _AREA_PER_FIN = 0.06
 
-# Read-path current per fin.  Writes drive the full I_on; reads are derated:
-# STT under-drives the read wordline to respect the read-disturb ceiling,
-# SOT's read current is series-limited by the MTJ stack resistance.
+# Read-path current per fin at the 16 nm anchor.  Writes drive the full
+# I_on; reads are derated: STT under-drives the read wordline to respect
+# the read-disturb ceiling, SOT's read current is series-limited by the MTJ
+# stack resistance.  Both MRAM access paths derate with the supply at
+# scaled nodes (i_read/i_write_per_fin exponents).
 _I_READ_PER_FIN = {"stt": 42e-6, "sot": 38.5e-6}
 # Short-pulse (650 ps << thermal switching time) read-disturb ceiling for
 # shared-path STT reads: 1.05x the smaller critical current.
 _STT_READ_CAP_FRAC = 1.05
+
+# Intrinsic 6T read/write time and ~fJ/bit bitline swing energy at 16 nm
+# (sram_bitcell anchors; CV/I and CV^2 node scaling).
+_SRAM_T_RW = 120e-12
+_SRAM_E_RW = 1.3e-15
+
+
+def _bitcell_scale(name: str, node: TechNode) -> float:
+    """s**exp factor of one bitcell-level quantity at ``node`` (exactly 1.0
+    at the 16 nm anchor)."""
+    return tech.scale_factor(node) ** tech.BITCELL_SCALING_EXPONENTS[name]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,13 +113,22 @@ class Bitcell:
                         dtype=np.float64)
 
 
-def _read_current(tech_name: str, dev: mtj.MTJDevice, fins: int) -> float:
-    i = fins * _I_READ_PER_FIN[tech_name]
+def _read_current(tech_name: str, dev: mtj.MTJDevice, node: TechNode,
+                  fins: int) -> float:
+    i = fins * _I_READ_PER_FIN[tech_name] * _bitcell_scale("i_read_per_fin",
+                                                           node)
     if tech_name == "stt":
         # Reads use the set-polarity current direction, so the short-pulse
         # disturb ceiling is referenced to Ic0(set).
         i = min(i, _STT_READ_CAP_FRAC * dev.ic0_set_a)
     return i
+
+
+def _write_current(node: TechNode, fins_write: int) -> float:
+    """MRAM write-path drive: full per-fin I_on derated by the node's
+    write-path headroom factor (tech.BITCELL_SCALING_EXPONENTS)."""
+    return fins_write * node.ion_per_fin_a \
+        * _bitcell_scale("i_write_per_fin", node)
 
 
 def _evaluate(tech_name: str, dev: mtj.MTJDevice, node: TechNode,
@@ -112,12 +137,12 @@ def _evaluate(tech_name: str, dev: mtj.MTJDevice, node: TechNode,
     total_fins = fins_write if shared else fins_read + fins_write
     if total_fins > MAX_FINS or fins_read < 1 or fins_write < 1:
         return None
-    i_write = fins_write * node.ion_per_fin_a
+    i_write = _write_current(node, fins_write)
     t_set = mtj.switching_time(dev, i_write, reset=False)
     t_reset = mtj.switching_time(dev, i_write, reset=True)
     if not (math.isfinite(t_set) and math.isfinite(t_reset)):
         return None  # below critical current: write never completes
-    i_read = _read_current(tech_name, dev, fins_read)
+    i_read = _read_current(tech_name, dev, node, fins_read)
     return Bitcell(
         name=tech_name,
         sense_latency_s=dev.sense_time_s,
@@ -128,7 +153,8 @@ def _evaluate(tech_name: str, dev: mtj.MTJDevice, node: TechNode,
         write_energy_reset_j=mtj.switching_energy(dev, i_write, reset=True),
         fins_read=fins_read,
         fins_write=fins_write,
-        area_norm=_AREA_BASE[tech_name] + _AREA_PER_FIN * total_fins,
+        area_norm=_AREA_BASE[tech_name] * _bitcell_scale("area_base", node)
+        + _AREA_PER_FIN * _bitcell_scale("area_per_fin", node) * total_fins,
         cell_leakage_w=total_fins * node.ioff_per_fin_a * node.vdd,
         read_current_a=i_read,
     )
@@ -142,10 +168,18 @@ def _edap(cell: Bitcell) -> float:
 
 
 def characterize(tech_name: str, node: TechNode = TECH_16NM) -> Bitcell:
-    """Fin-count sweep (paper §III-A) -> EDAP-optimal bitcell."""
+    """Fin-count sweep (paper §III-A) -> EDAP-optimal bitcell.
+
+    The sweep runs on the node-projected device (``mtj.device``) with
+    node-derated drive currents, so a scaled node re-characterizes the
+    bitcell on genuinely scaled physics.  If no fin assignment's write
+    current clears the device's critical current — the STT scaling wall at
+    deep nodes, where drive derates faster than the retention-pinned Ic0 —
+    the raised diagnostic says exactly how far short the best drive falls.
+    """
     if tech_name == "sram":
         return sram_bitcell(node)
-    dev = {"stt": mtj.STT_16NM, "sot": mtj.SOT_16NM}[tech_name]
+    dev = mtj.device(tech_name, node)
     shared = tech_name == "stt"
     candidates = []
     if shared:
@@ -153,14 +187,24 @@ def characterize(tech_name: str, node: TechNode = TECH_16NM) -> Bitcell:
             cell = _evaluate(tech_name, dev, node, fins, fins, shared=True)
             if cell is not None:
                 candidates.append(cell)
+        max_write_fins = MAX_FINS
     else:
         for fr in range(1, MAX_FINS):
             for fw in range(1, MAX_FINS):
                 cell = _evaluate(tech_name, dev, node, fr, fw, shared=False)
                 if cell is not None:
                     candidates.append(cell)
+        max_write_fins = MAX_FINS - 1  # >= 1 fin reserved for the read path
     if not candidates:
-        raise ValueError(f"no feasible bitcell for {tech_name}")
+        best_i = _write_current(node, max_write_fins)
+        ic0 = max(dev.ic0_set_a, dev.ic0_reset_a)
+        raise ValueError(
+            f"no feasible {tech_name} bitcell at node {node.name!r}: the "
+            f"best available write current ({max_write_fins} fins -> "
+            f"{best_i * 1e6:.1f} uA) does not exceed the device critical "
+            f"current (Ic0 = {ic0 * 1e6:.1f} uA) — the node's drive derates "
+            "below the switching threshold (see "
+            "tech.BITCELL_SCALING_EXPONENTS / tech.MTJ_SCALING_EXPONENTS)")
     return min(candidates, key=_edap)
 
 
@@ -173,10 +217,12 @@ def sram_bitcell(node: TechNode = TECH_16NM) -> Bitcell:
     ``TechNode.sram_cell_leak_w`` is calibrated at the 16 nm anchor so the
     3 MB EDAP-tuned cache reproduces Table II's 6442 mW, and scaled nodes
     carry their own (worsening) projection — the cross-node SRAM leakage
-    trend the DTCO analysis reads.
+    trend the DTCO analysis reads.  The intrinsic 6T access time and energy
+    scale with the node too (CV/I and CV^2 rules,
+    tech.BITCELL_SCALING_EXPONENTS).
     """
-    t_rw = 120e-12        # intrinsic 6T read/write time at 16 nm
-    e_rw = 1.3e-15        # ~fJ/bit bitline swing energy
+    t_rw = _SRAM_T_RW * _bitcell_scale("sram_t_rw", node)
+    e_rw = _SRAM_E_RW * _bitcell_scale("sram_e_rw", node)
     return Bitcell(
         name="sram",
         sense_latency_s=t_rw,

@@ -32,6 +32,10 @@ Like NVSim against a PDK, the model's absolute scale is calibrated: per-
 technology multipliers (core/calibration.py) anchor the EDAP-tuned 3 MB
 (iso-capacity) and 7/10 MB (iso-area) designs to paper Table II, and the
 structural model provides the scaling behaviour across 1–64 MB (Fig. 9).
+The periphery building blocks (gate delay, sense amp, wire capacitances,
+H-tree terms) are node-derived: :class:`Periphery` projects the 16 nm
+anchor constants through ``tech.PERIPHERY_SCALING_EXPONENTS``, so a scaled
+node re-times and re-energizes the periphery, not just the array.
 Bit-flip statistics: MRAM writes use differential write (only flipped bits
 switch; Flip-N-Write-style, standard for MRAM macros) with the measured DL
 bit-flip probability FLIP_P.
@@ -40,9 +44,11 @@ bit-flip probability FLIP_P.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 import math
 
+from repro.core import tech
 from repro.core.bitcell import Bitcell, characterize
 from repro.core.tech import TechNode, TECH_16NM, mm2_from_um2
 
@@ -61,6 +67,9 @@ COL_CHOICES = (256, 512, 1024, 2048)
 BANK_CHOICES = (1, 2, 4, 8, 16, 32)
 
 # Periphery timing/energy building blocks at 16 nm (pre-calibration scale).
+# These are the *anchor* values; every node — including the anchor itself —
+# consumes them through the ``Periphery`` projection below, so the batched
+# engine and the scalar model read identical node-derived quantities.
 _T_GATE = 18e-12          # FO4-ish gate delay
 _T_SENSE_AMP = 110e-12    # sense-amp resolve time
 _E_GATE = 0.9e-15         # per-gate switching energy
@@ -68,6 +77,52 @@ _HTREE_NS_PER_MM = 0.33   # repeated-wire delay
 _HTREE_PJ_PER_MM_BIT = 0.021
 _C_BITLINE_PER_ROW = 0.20e-15   # F per cell on the bitline
 _C_WORDLINE_PER_COL = 0.22e-15  # F per cell on the wordline
+
+
+@dataclasses.dataclass(frozen=True)
+class Periphery:
+    """Node-derived periphery timing/energy building blocks.
+
+    One frozen bundle of every periphery constant the PPA equations read,
+    projected from the 16 nm anchor by ``tech.PERIPHERY_SCALING_EXPONENTS``
+    (each field ``anchor * s**exp``; exactly the anchor values at s = 1).
+    Both the scalar :class:`CacheModel` and the batched engine
+    (``engine.NODE_FIELDS``) consume these per-node values — there are no
+    anchor-pinned periphery constants left in the equations.
+    """
+
+    t_gate: float                 # FO4-ish gate delay [s]
+    t_sense_amp: float            # sense-amp resolve time [s]
+    e_gate: float                 # per-gate switching energy [J]
+    htree_ns_per_mm: float        # repeated-wire delay [ns/mm]
+    htree_pj_per_mm_bit: float    # H-tree wire energy [pJ/(mm*bit)]
+    c_bitline_per_row: float      # F per cell on the bitline
+    c_wordline_per_col: float     # F per cell on the wordline
+
+
+# Field order is the engine's packing order (engine.NODE_FIELDS suffix).
+PERIPHERY_FIELDS = tuple(f.name for f in dataclasses.fields(Periphery))
+
+_PERIPHERY_16NM = Periphery(
+    t_gate=_T_GATE,
+    t_sense_amp=_T_SENSE_AMP,
+    e_gate=_E_GATE,
+    htree_ns_per_mm=_HTREE_NS_PER_MM,
+    htree_pj_per_mm_bit=_HTREE_PJ_PER_MM_BIT,
+    c_bitline_per_row=_C_BITLINE_PER_ROW,
+    c_wordline_per_col=_C_WORDLINE_PER_COL,
+)
+
+
+@functools.cache
+def periphery(node: TechNode = TECH_16NM) -> Periphery:
+    """The periphery building blocks at ``node``: the 16 nm anchor scaled
+    field-by-field through ``tech.PERIPHERY_SCALING_EXPONENTS``."""
+    s = tech.scale_factor(node)
+    return Periphery(**{
+        f: getattr(_PERIPHERY_16NM, f)
+        * s ** tech.PERIPHERY_SCALING_EXPONENTS[f]
+        for f in PERIPHERY_FIELDS})
 
 
 # SRAM-only capacity-stress exponents.  Holding SRAM frequency and yield at
@@ -138,6 +193,7 @@ class CacheModel:
         from repro.core import calibration as _cal  # local: avoids cycle
         self.mem = mem
         self.node = node
+        self.peri = periphery(node)
         self.cell = cell if cell is not None else characterize(mem, node)
         self.cal = calibration if calibration is not None \
             else _cal.get(mem, node)
@@ -179,10 +235,10 @@ class CacheModel:
     # -- latency -------------------------------------------------------------
 
     def _decoder_delay(self, org: CacheOrg) -> float:
-        return math.log2(org.rows) * _T_GATE
+        return math.log2(org.rows) * self.peri.t_gate
 
     def _wordline_delay(self, org: CacheOrg) -> float:
-        c_wl = org.cols * _C_WORDLINE_PER_COL
+        c_wl = org.cols * self.peri.c_wordline_per_col
         return 2.2 * c_wl * (self.node.vdd / self.node.ion_per_fin_a) * 0.05
 
     def _bitline_time(self, org: CacheOrg) -> float:
@@ -192,34 +248,36 @@ class CacheModel:
         capacitance by the sense margin, then the device sense time applies.
         SRAM: differential discharge by the (larger) cell read current.
         """
-        c_bl = org.rows * _C_BITLINE_PER_ROW
+        c_bl = org.rows * self.peri.c_bitline_per_row
         i_read = self.cell.read_current_a
         t_slew = c_bl * self.node.sense_voltage_v / i_read
-        return t_slew + self.cell.sense_latency_s + _T_SENSE_AMP
+        return t_slew + self.cell.sense_latency_s + self.peri.t_sense_amp
 
     def _routing_delay(self, capacity_bytes: int, org: CacheOrg) -> float:
         """Predecoder + subarray-select tree: grows with subarray count —
         the term that penalizes over-fragmented organizations and gives
         Algorithm 1 an interior optimum."""
         n_sub = self._subarrays(capacity_bytes, org)
-        return 2.0 * _T_GATE * math.log2(max(2, n_sub))
+        return 2.0 * self.peri.t_gate * math.log2(max(2, n_sub))
 
     def read_latency(self, capacity_bytes: int, org: CacheOrg) -> float:
-        ht = self._htree_mm(capacity_bytes, org) * _HTREE_NS_PER_MM * 1e-9
+        ht = self._htree_mm(capacity_bytes, org) \
+            * self.peri.htree_ns_per_mm * 1e-9
         route = self._routing_delay(capacity_bytes, org)
         array = self._decoder_delay(org) + self._wordline_delay(org) + self._bitline_time(org)
         tag = self._decoder_delay(org) + self._wordline_delay(org) + 0.4 * self._bitline_time(org)
         if org.access == "sequential":
-            lat = ht + route + tag + array + 2 * _T_GATE
+            lat = ht + route + tag + array + 2 * self.peri.t_gate
         elif org.access == "fast":
-            lat = ht + route + array + _T_GATE
+            lat = ht + route + array + self.peri.t_gate
         else:  # normal: tag || data, way-select mux at the end
-            lat = ht + route + max(tag, array) + 3 * _T_GATE
+            lat = ht + route + max(tag, array) + 3 * self.peri.t_gate
         return lat * self.cal.k_read_lat \
             * self._stress(capacity_bytes, _SRAM_LAT_STRESS_EXP)
 
     def write_latency(self, capacity_bytes: int, org: CacheOrg) -> float:
-        ht = self._htree_mm(capacity_bytes, org) * _HTREE_NS_PER_MM * 1e-9
+        ht = self._htree_mm(capacity_bytes, org) \
+            * self.peri.htree_ns_per_mm * 1e-9
         lat = (ht + self._routing_delay(capacity_bytes, org)
                + self._decoder_delay(org) + self._wordline_delay(org)
                + self.cell.write_latency_avg_s)
@@ -234,24 +292,24 @@ class CacheModel:
         sense = bits * ways_sensed * self.cell.sense_energy_j
         # bitline charging: read current drawn for the bitline time across
         # the sensed columns
-        c_bl = org.rows * _C_BITLINE_PER_ROW
+        c_bl = org.rows * self.peri.c_bitline_per_row
         bitline = bits * ways_sensed * c_bl * self.node.vdd * self.node.vdd
-        ht = (self._htree_mm(capacity_bytes, org) * _HTREE_PJ_PER_MM_BIT
-              * 1e-12 * bits)
-        decoder = math.log2(org.rows) * 64 * _E_GATE
-        route = self._subarrays(capacity_bytes, org) * 4 * _E_GATE
+        ht = (self._htree_mm(capacity_bytes, org)
+              * self.peri.htree_pj_per_mm_bit * 1e-12 * bits)
+        decoder = math.log2(org.rows) * 64 * self.peri.e_gate
+        route = self._subarrays(capacity_bytes, org) * 4 * self.peri.e_gate
         return (sense + bitline + ht + decoder + route) * self.cal.k_read_e
 
     def write_energy(self, capacity_bytes: int, org: CacheOrg) -> float:
         bits = LINE_BYTES * 8
         flips = bits * (FLIP_P if self.mem != "sram" else 1.0)
         cellw = flips * self.cell.write_energy_avg_j
-        c_bl = org.rows * _C_BITLINE_PER_ROW
+        c_bl = org.rows * self.peri.c_bitline_per_row
         bitline = bits * c_bl * self.node.vdd * self.node.vdd * 2.0
-        ht = (self._htree_mm(capacity_bytes, org) * _HTREE_PJ_PER_MM_BIT
-              * 1e-12 * bits)
-        decoder = math.log2(org.rows) * 64 * _E_GATE
-        route = self._subarrays(capacity_bytes, org) * 4 * _E_GATE
+        ht = (self._htree_mm(capacity_bytes, org)
+              * self.peri.htree_pj_per_mm_bit * 1e-12 * bits)
+        decoder = math.log2(org.rows) * 64 * self.peri.e_gate
+        route = self._subarrays(capacity_bytes, org) * 4 * self.peri.e_gate
         return (cellw + bitline + ht + decoder + route) * self.cal.k_write_e
 
     # -- leakage ---------------------------------------------------------------

@@ -131,9 +131,13 @@ _BASE = {
 def _has_derivation_rule(node: TechNode) -> bool:
     """A node is calibratable iff it is the 16 nm anchor or was produced by
     ``tech.scaled_node`` (reconstructing it through the scaling rule is
-    exact for those and only those)."""
+    exact for those and only those).  The reconstruction bypasses the
+    extrapolation guard: a node the caller built with
+    ``allow_extrapolation=True`` still carries the derivation rule — the
+    guard protects construction, not recognition."""
     return node == TECH_16NM or \
-        tech.scaled_node(node.feature_size_m, name=node.name) == node
+        tech.scaled_node(node.feature_size_m, name=node.name,
+                         allow_extrapolation=True) == node
 
 
 @functools.cache

@@ -19,11 +19,19 @@ flavors' storage cells do not leak, so the leakage (and with it EDP) gap
 widens monotonically from 16 nm down to 7 nm.
 
 Node parameters at non-anchor nodes are first-order Dennard-style
-projections from the calibrated 16 nm anchor (``tech.scaled_node``); the
-periphery timing/energy building blocks of cachemodel.py stay at their
-anchor values, so the cross-node signal is carried by supply, drive,
-cell-area, and leakage scaling — a qualitative DTCO projection, not a
-re-calibration per node.
+projections from the calibrated 16 nm anchor: every layer re-derives from
+the node — the MTJ device (``mtj.device``), the bitcell fin sweep
+(``bitcell.characterize``), the periphery timing/energy building blocks
+(``cachemodel.periphery``), and the calibration coefficients
+(``calibration.get``) — each through one documented exponent
+(tech.*_SCALING_EXPONENTS), so the cross-node rows carry genuine
+device-and-periphery signal, not anchor constants in disguise.
+
+Two cross-node studies live here: the iso-capacity study (``analyze``,
+every node at the same 3 MB) and the iso-AREA study (``isoarea_analyze``)
+— at each node the SRAM area budget is re-derived and spent on the MRAM
+capacity that fits it (``isoarea.corners(node=...)``), the deliverable the
+node-aware projection layer unlocks.
 """
 
 from __future__ import annotations
@@ -31,7 +39,7 @@ from __future__ import annotations
 import dataclasses
 from collections.abc import Sequence
 
-from repro.core import sweep
+from repro.core import isoarea, sweep
 from repro.core.isocap import CAPACITY_MB, INFER_BATCH, TRAIN_BATCH, MEMS
 from repro.core.tech import (GTX_1080TI, Platform, TechNode,
                              TECH_16NM, TECH_12NM, TECH_10NM, TECH_7NM)
@@ -85,6 +93,13 @@ def analyze(workloads: dict[str, Workload] | None = None,
     tuned design plus scenario-mean normalized workload metrics."""
     s = spec(workloads, capacity_mb, nodes, platform,
              infer_batch, train_batch)
+    return _rows(s)
+
+
+def _rows(s: sweep.SweepSpec) -> list[DTCORow]:
+    """Run a cross-node spec and fold it to one DTCORow per design point:
+    circuit-layer leakage/area of the tuned design plus scenario-mean
+    normalized workload metrics (each node against its own baseline)."""
     res = sweep.run(s)
     norm = res.norm_to()
     m = {name: norm.metric(name, include_dram=(name == "edp"))
@@ -105,6 +120,80 @@ def analyze(workloads: dict[str, Workload] | None = None,
             runtime_x=float(m["runtime"][0, :, j].mean()),
         ))
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Cross-node iso-AREA study
+# ---------------------------------------------------------------------------
+
+
+def isoarea_spec(workloads: dict[str, Workload] | None = None,
+                 sram_capacity_mb: float = CAPACITY_MB,
+                 nodes: Sequence[TechNode] = NODES,
+                 platform: Platform = GTX_1080TI,
+                 infer_batch: int = INFER_BATCH,
+                 train_batch: int = TRAIN_BATCH) -> sweep.SweepSpec:
+    """The cross-node iso-AREA study as one declarative sweep.
+
+    At every node the SRAM area budget is re-derived from that node's
+    EDAP-tuned designs and spent on the largest-fitting MRAM capacities
+    (``isoarea.corners(node=...)``) — so both the capacities *and* the
+    normalization baseline are per node.  Each node's three corners share
+    the ``(node.name, 0)`` normalization group, matching the node-suffixed
+    ``DesignCorners`` symbolic form."""
+    workloads = workloads if workloads is not None else paper_workloads()
+    nodes = tuple(nodes)
+    points = tuple(
+        dataclasses.replace(
+            p, group=(nd.name, 0) if len(nodes) > 1 else 0)
+        for nd in nodes
+        for p in isoarea.corners(sram_capacity_mb, node=nd))
+    return sweep.SweepSpec(
+        name="dtco_isoarea",
+        scenarios=sweep.workload_scenarios(
+            workloads, ((False, infer_batch), (True, train_batch))),
+        designs=points,
+        platforms=(platform,))
+
+
+def isoarea_analyze(workloads: dict[str, Workload] | None = None,
+                    sram_capacity_mb: float = CAPACITY_MB,
+                    nodes: Sequence[TechNode] = NODES,
+                    platform: Platform = GTX_1080TI,
+                    infer_batch: int = INFER_BATCH,
+                    train_batch: int = TRAIN_BATCH) -> list[DTCORow]:
+    """One DTCORow per (node, memory) at that node's iso-area corners:
+    the ``capacity_mb`` column carries the per-node iso-area capacity."""
+    return _rows(isoarea_spec(workloads, sram_capacity_mb, nodes, platform,
+                              infer_batch, train_batch))
+
+
+def isoarea_headline(rows: Sequence[DTCORow],
+                     ) -> dict[str, dict[str, float]]:
+    """Cross-node iso-area trend claims: each MRAM flavor's iso-area
+    capacity at both ends of the node sweep (the density advantage the
+    area budget buys) and its leakage/EDP reduction there (the widening
+    gap against same-node SRAM)."""
+    by = {(r.node, r.mem): r for r in rows}
+    node_order = list(dict.fromkeys(r.node for r in rows))
+    first, last = node_order[0], node_order[-1]
+    out: dict[str, dict[str, float]] = {
+        "sram": dict(
+            leak_w_first=by[first, "sram"].leakage_w,
+            leak_w_last=by[last, "sram"].leakage_w,
+            leak_growth=by[last, "sram"].leakage_w
+            / by[first, "sram"].leakage_w,
+        )}
+    for mem in ("stt", "sot"):
+        out[mem] = dict(
+            capacity_mb_first=by[first, mem].capacity_mb,
+            capacity_mb_last=by[last, mem].capacity_mb,
+            leak_reduction_first=1.0 / by[first, mem].leak_x,
+            leak_reduction_last=1.0 / by[last, mem].leak_x,
+            edp_reduction_first=1.0 / by[first, mem].edp_x,
+            edp_reduction_last=1.0 / by[last, mem].edp_x,
+        )
+    return out
 
 
 def headline(rows: Sequence[DTCORow]) -> dict[str, dict[str, float]]:

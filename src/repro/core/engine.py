@@ -10,7 +10,9 @@ Representation: structure-of-arrays.  The organization grid is four flat
 arrays (banks, rows, cols, access index) in exactly the order the scalar
 ``CacheModel.design_space`` iterates (itertools.product over the same
 choices), so argmin tie-breaking matches the scalar ``min``.  Technology
-nodes are rows of a node parameter matrix (NODE_FIELDS) and, per node,
+nodes are rows of a node parameter matrix (NODE_FIELDS: the TechNode
+supply/drive/sense/cell-area parameters followed by the node-derived
+periphery building blocks of ``cachemodel.periphery``) and, per node,
 technologies are rows of two parameter matrices — the characterized
 bitcell vector (bitcell.ARRAY_FIELDS, node-dependent through the fin
 sweep) and the calibration vector (CAL_FIELDS, node-dependent through the
@@ -56,20 +58,15 @@ from repro.core.cachemodel import (
     COL_CHOICES,
     FLIP_P,
     LINE_BYTES,
+    PERIPHERY_FIELDS,
     ROW_CHOICES,
     TAG_BITS,
     CacheDesign,
     CacheOrg,
-    _C_BITLINE_PER_ROW,
-    _C_WORDLINE_PER_COL,
-    _E_GATE,
-    _HTREE_NS_PER_MM,
-    _HTREE_PJ_PER_MM_BIT,
     _SRAM_LAT_STRESS_EXP,
     _SRAM_LEAK_STRESS_EXP,
     _STRESS_ANCHOR_MB,
-    _T_GATE,
-    _T_SENSE_AMP,
+    periphery,
 )
 from repro.core.tech import TechNode, TECH_16NM
 
@@ -88,9 +85,28 @@ CAL_FIELDS = (
     "k_write_e",
 )
 
-# TechNode parameters the equations read (packed as a small vector so a
-# non-default node stays a runtime input, not a recompile).
-NODE_FIELDS = ("vdd", "ion_per_fin_a", "sense_voltage_v", "sram_cell_area_um2")
+# TechNode parameters the equations read, followed by the node-derived
+# periphery building blocks (cachemodel.Periphery, in PERIPHERY_FIELDS
+# order) — packed as one per-node vector so a non-default node stays a
+# runtime input, not a recompile.
+#
+# Bit-identity note: the kernel is traced twice, switched by the static
+# ``anchor_peri`` flag.  The anchor trace binds the periphery as Python
+# floats — producing the exact HLO the pre-refactor kernel compiled to,
+# because XLA's fusion/codegen is last-ulp sensitive to whether a
+# multiplicand is a literal or a broadcast tensor — and the node trace
+# reads the same quantities from the ``peri`` matrix.  ``sweep`` routes
+# each node row by *value* (anchor-periphery rows to the anchor trace),
+# so the 16 nm anchor stays bit-identical to the scalar calibration while
+# scaled nodes remain runtime tensor inputs: two compilations total, ever.
+TECHNODE_FIELDS = ("vdd", "ion_per_fin_a", "sense_voltage_v",
+                   "sram_cell_area_um2")
+NODE_FIELDS = TECHNODE_FIELDS + PERIPHERY_FIELDS
+_N_TECHNODE = len(TECHNODE_FIELDS)
+
+# The anchor periphery as trace-time constants for the anchor_peri trace.
+_PERI_16NM_ROW = tuple(
+    getattr(periphery(TECH_16NM), f) for f in PERIPHERY_FIELDS)
 
 # --- structure-of-arrays organization grid ---------------------------------
 # Same product order as CacheModel.design_space so masked argmins break ties
@@ -122,16 +138,21 @@ def valid_mask(capacities_bytes: np.ndarray) -> np.ndarray:
     return ~(degenerate | too_few)
 
 
-@jax.jit
-def _ppa_kernel(cell, cal, is_sram, node, caps_bytes, banks, rows, cols, acc):
+@functools.partial(jax.jit, static_argnames="anchor_peri")
+def _ppa_kernel(cell, cal, is_sram, node, peri, caps_bytes, banks, rows,
+                cols, acc, *, anchor_peri):
     """PPA equations of cachemodel.py as one batched map.
 
     cell [n, m, 7] (bitcell.ARRAY_FIELDS), cal [n, m, 8] (CAL_FIELDS),
-    is_sram [m], node [n, 4] (NODE_FIELDS), caps_bytes [c],
-    banks/rows/cols/acc [o]  ->  dict of [n, m, c, o] / [n, m, c] tensors.
+    is_sram [m], node [n, 4] (TECHNODE_FIELDS), peri [n, 7]
+    (PERIPHERY_FIELDS), caps_bytes [c], banks/rows/cols/acc [o]
+    ->  dict of [n, m, c, o] / [n, m, c] tensors.
 
     Every expression keeps the scalar path's operation order so float64
-    results match the Python-float reference to the last ulps.
+    results match the Python-float reference to the last ulps.  The static
+    ``anchor_peri`` flag selects where the periphery comes from: the 16 nm
+    constants as trace-time literals (bit-identical anchor codegen; ``peri``
+    is ignored) or the ``peri`` matrix (scaled nodes, runtime input).
     """
     # broadcast axes: n = node, m = technology, c = capacity, o = org
     def M(x):      # [n, m] -> [n, m, 1, 1]
@@ -140,8 +161,15 @@ def _ppa_kernel(cell, cal, is_sram, node, caps_bytes, banks, rows, cols, acc):
     def N(x):      # [n] -> [n, 1, 1, 1]
         return x[:, None, None, None]
 
-    vdd, ion, sense_v, sram_cell_um2 = (N(node[:, i])
-                                        for i in range(node.shape[1]))
+    (vdd, ion, sense_v, sram_cell_um2) = (N(node[:, i])
+                                          for i in range(node.shape[1]))
+    if anchor_peri:
+        (t_gate, t_sense_amp, e_gate, htree_ns_per_mm, htree_pj_per_mm_bit,
+         c_bitline_per_row, c_wordline_per_col) = _PERI_16NM_ROW
+    else:
+        (t_gate, t_sense_amp, e_gate, htree_ns_per_mm, htree_pj_per_mm_bit,
+         c_bitline_per_row, c_wordline_per_col) = (
+            N(peri[:, i]) for i in range(peri.shape[1]))
     (i_read, sense_lat, sense_e, wlat_avg, we_avg, area_norm,
      cell_leak) = (M(cell[:, :, i]) for i in range(cell.shape[2]))
     (peri_area_lin, peri_area_sqrt, leak_lin, leak_sqrt,
@@ -173,19 +201,19 @@ def _ppa_kernel(cell, cal, is_sram, node, caps_bytes, banks, rows, cols, acc):
     stress_leak = jnp.where(sram, stress_base ** _SRAM_LEAK_STRESS_EXP, 1.0)
 
     # -- latency -----------------------------------------------------------
-    decoder = jnp.log2(rows) * _T_GATE
-    c_wl = cols * _C_WORDLINE_PER_COL
+    decoder = jnp.log2(rows) * t_gate
+    c_wl = cols * c_wordline_per_col
     wordline = 2.2 * c_wl * (vdd / ion) * 0.05
-    c_bl = rows * _C_BITLINE_PER_ROW
-    bitline = c_bl * sense_v / i_read + sense_lat + _T_SENSE_AMP
-    routing = 2.0 * _T_GATE * jnp.log2(jnp.maximum(2.0, n_sub))
-    ht_lat = htree_mm * _HTREE_NS_PER_MM * 1e-9
+    c_bl = rows * c_bitline_per_row
+    bitline = c_bl * sense_v / i_read + sense_lat + t_sense_amp
+    routing = 2.0 * t_gate * jnp.log2(jnp.maximum(2.0, n_sub))
+    ht_lat = htree_mm * htree_ns_per_mm * 1e-9
 
     array_t = decoder + wordline + bitline
     tag_t = decoder + wordline + 0.4 * bitline
-    lat_seq = ht_lat + routing + tag_t + array_t + 2 * _T_GATE
-    lat_fast = ht_lat + routing + array_t + _T_GATE
-    lat_norm = ht_lat + routing + jnp.maximum(tag_t, array_t) + 3 * _T_GATE
+    lat_seq = ht_lat + routing + tag_t + array_t + 2 * t_gate
+    lat_fast = ht_lat + routing + array_t + t_gate
+    lat_norm = ht_lat + routing + jnp.maximum(tag_t, array_t) + 3 * t_gate
     read_lat = jnp.where(acc == _SEQ, lat_seq,
                          jnp.where(acc == _FAST, lat_fast, lat_norm))
     read_lat = read_lat * k_read_lat * stress_lat
@@ -197,9 +225,9 @@ def _ppa_kernel(cell, cal, is_sram, node, caps_bytes, banks, rows, cols, acc):
     ways_sensed = jnp.where(acc == _SEQ, 1.0, float(ASSOC))
     sense = line_bits * ways_sensed * sense_e
     bl_read = line_bits * ways_sensed * c_bl * vdd * vdd
-    ht_e = htree_mm * _HTREE_PJ_PER_MM_BIT * 1e-12 * line_bits
-    dec_e = jnp.log2(rows) * 64 * _E_GATE
-    route_e = n_sub * 4 * _E_GATE
+    ht_e = htree_mm * htree_pj_per_mm_bit * 1e-12 * line_bits
+    dec_e = jnp.log2(rows) * 64 * e_gate
+    route_e = n_sub * 4 * e_gate
     read_e = (sense + bl_read + ht_e + dec_e + route_e) * k_read_e
 
     flips = line_bits * jnp.where(sram, 1.0, FLIP_P)
@@ -427,9 +455,50 @@ def _tech_matrices(mems, cells, cals, nodes):
     cal_mat = np.array([[[getattr(cal, f) for f in CAL_FIELDS]
                          for cal in row] for row in cals], dtype=np.float64)
     is_sram = np.array([m == "sram" for m in mems])
-    node_mat = np.array([[getattr(nd, f) for f in NODE_FIELDS]
-                         for nd in nodes], dtype=np.float64)
+    node_mat = np.array(
+        [[getattr(nd, f) for f in TECHNODE_FIELDS]
+         + [getattr(periphery(nd), f) for f in PERIPHERY_FIELDS]
+         for nd in nodes], dtype=np.float64)
     return cell_mat, cal_mat, is_sram, node_mat
+
+
+def _run_kernel(cell_mat, cal_mat, is_sram, node_mat, caps_arr,
+                banks, rows, cols, acc) -> dict[str, np.ndarray]:
+    """Dispatch node rows by periphery value and merge the kernel outputs.
+
+    Rows whose periphery equals the 16 nm anchor's go through the
+    anchor_peri trace (trace-time periphery constants — the bit-identity
+    invariant of the refactor), every other row through the runtime-peri
+    trace.  Each row is evaluated exactly once; the merge restores the
+    caller's node order.  Both traces are compiled once, so a new node
+    value never triggers a recompile.
+    """
+    node4 = np.ascontiguousarray(node_mat[:, :_N_TECHNODE])
+    peri = np.ascontiguousarray(node_mat[:, _N_TECHNODE:])
+    anchor_row = np.array([np.array_equal(p, _PERI_16NM_ROW) for p in peri])
+
+    def run(sel, anchor_peri):
+        with enable_x64():
+            out = _ppa_kernel(cell_mat[sel], cal_mat[sel], is_sram,
+                              node4[sel], peri[sel], caps_arr,
+                              banks, rows, cols, acc,
+                              anchor_peri=anchor_peri)
+        return {k: np.asarray(v) for k, v in out.items()}
+
+    if anchor_row.all():
+        return run(slice(None), True)
+    if not anchor_row.any():
+        return run(slice(None), False)
+    out_a = run(anchor_row, True)
+    out_r = run(~anchor_row, False)
+    merged = {}
+    for k in out_a:
+        full_shape = (len(anchor_row),) + out_a[k].shape[1:]
+        buf = np.empty(full_shape, dtype=out_a[k].dtype)
+        buf[anchor_row] = out_a[k]
+        buf[~anchor_row] = out_r[k]
+        merged[k] = buf
+    return merged
 
 
 def evaluate(capacities_bytes, orgs, mems=MEMS, cells=None, cals=None,
@@ -452,10 +521,8 @@ def evaluate(capacities_bytes, orgs, mems=MEMS, cells=None, cals=None,
                    dtype=np.int64)
     cell_mat, cal_mat, is_sram, node_mat = _tech_matrices(
         mems, cells, cals, nodes)
-    with enable_x64():
-        out = _ppa_kernel(cell_mat, cal_mat, is_sram, node_mat, caps_arr,
-                          banks, rows, cols, acc)
-    return {k: np.asarray(v) for k, v in out.items()}
+    return _run_kernel(cell_mat, cal_mat, is_sram, node_mat, caps_arr,
+                       banks, rows, cols, acc)
 
 
 def sweep(capacities_bytes, mems=MEMS, cells=None, cals=None,
@@ -473,9 +540,8 @@ def sweep(capacities_bytes, mems=MEMS, cells=None, cals=None,
     cell_mat, cal_mat, is_sram, node_mat = _tech_matrices(
         mems, cells, cals, nodes)
     caps_arr = np.array(caps, dtype=np.int64)
-    with enable_x64():
-        out = _ppa_kernel(cell_mat, cal_mat, is_sram, node_mat, caps_arr,
-                          ORG_BANKS, ORG_ROWS, ORG_COLS, ORG_ACCESS)
+    out = _run_kernel(cell_mat, cal_mat, is_sram, node_mat, caps_arr,
+                      ORG_BANKS, ORG_ROWS, ORG_COLS, ORG_ACCESS)
     return DesignTable(
         nodes=nodes,
         mems=mems,

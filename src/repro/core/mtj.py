@@ -20,11 +20,22 @@ selects that region.  Write energy is Joule dissipation in the write path:
 For STT the write path is the MTJ itself (R_P / R_AP for the two switching
 polarities); for SOT it is the heavy-metal line plus driver (read and write
 paths are decoupled, which is the whole point of SOT).
+
+Technology nodes: the Table I anchors are 16 nm devices.  ``device(flavor,
+node)`` projects them to other nodes through the documented exponents in
+``tech.MTJ_SCALING_EXPONENTS`` (ground rules per the SOT-MRAM DTCO study,
+arXiv 2303.12310): STT's Ic0 is retention-pinned and barely falls while the
+access drive derates — the STT scaling wall — whereas SOT's Ic0 tracks the
+shrinking heavy-metal track and scales gracefully.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
+
+from repro.core import tech
+from repro.core.tech import TechNode, TECH_16NM
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +92,26 @@ SOT_16NM = MTJDevice(
     r_read_ohm=4.64e3,     # read still goes through the MTJ stack
     read_disturb_frac=1.0,  # decoupled read path: no write-current disturb
 )
+
+_ANCHORS = {"stt": STT_16NM, "sot": SOT_16NM}
+
+
+@functools.cache
+def device(flavor: str, node: TechNode = TECH_16NM) -> MTJDevice:
+    """Node-projected MTJ device: the 16 nm Table I anchor scaled by the
+    documented ``tech.MTJ_SCALING_EXPONENTS`` rules (Ic0, time constants,
+    path resistances, sense window — each ``anchor * s**exp``).
+
+    At the anchor s = 1.0 exactly, so every field is a bit-exact
+    multiply-by-1.0 of the Table I calibration — the projection layer
+    cannot drift the anchor.  ``read_disturb_frac`` is a device-topology
+    property (shared vs decoupled read path), not a scaled quantity.
+    """
+    anchor = _ANCHORS[flavor]
+    s = tech.scale_factor(node)
+    exps = tech.MTJ_SCALING_EXPONENTS[flavor]
+    return dataclasses.replace(
+        anchor, **{f: getattr(anchor, f) * s ** e for f, e in exps.items()})
 
 
 def switching_time(dev: MTJDevice, i_write_a: float, *, reset: bool) -> float:

@@ -270,10 +270,21 @@ class DesignGrid:
 @dataclasses.dataclass(frozen=True)
 class DesignCorners:
     """Symbolic corner set — named (mem, capacity) points sharing one
-    normalization group per node, lowered via ``design_corners``.  Corner
-    names carry no node suffix; the ``nodes`` field replicates the set."""
+    normalization group per node, lowered via ``design_corners``.
 
-    points: tuple[str, ...]       # "mem@<capacity>MB" names
+    Two node forms, mutually exclusive:
+
+      * the ``nodes`` field replicates a node-free corner set per node —
+        the same capacities everywhere (iso-capacity across nodes);
+      * node-suffixed point names ("stt@8MB@12nm-scaled") place each
+        corner on its own node — per-node capacities, as the cross-node
+        iso-area study needs (the area budget buys a different capacity
+        at every node).  With several distinct nodes each corner joins
+        the ``(node.name, group)`` normalization group, so every node
+        normalizes against its own baseline corner.
+    """
+
+    points: tuple[str, ...]       # "mem@<capacity>MB[@<node>]" names
     group: object = 0
     nodes: tuple[str, ...] = ()
 
@@ -289,15 +300,26 @@ class DesignCorners:
             mem, cap, node = parse_design(name)
             if node != TECH_16NM:
                 raise ValueError(
-                    f"corner {name!r} must not name a node; corner sets "
-                    "carry nodes via the 'nodes' field")
+                    f"corner {name!r} must not name a node when the "
+                    "'nodes' field replicates the set; either drop the "
+                    "suffix or leave 'nodes' empty and suffix every "
+                    "off-anchor corner")
             pairs.append((mem, cap))
         return tuple(pairs)
 
     def resolved_points(self) -> tuple[DesignPoint, ...]:
-        nodes = tuple(tech.node(n) for n in self.nodes) or (TECH_16NM,)
-        return design_corners(self.corner_pairs(), group=self.group,
-                              nodes=nodes)
+        if self.nodes:
+            nodes = tuple(tech.node(n) for n in self.nodes)
+            return design_corners(self.corner_pairs(), group=self.group,
+                                  nodes=nodes)
+        parsed = tuple(parse_design(name) for name in self.points)
+        single = len({node for _, _, node in parsed}) == 1
+        return tuple(
+            DesignPoint(mem, int(cap * 2**20),
+                        group=self.group if single
+                        else (node.name, self.group),
+                        node=node)
+            for mem, cap, node in parsed)
 
     def to_doc(self) -> dict:
         doc: dict = {"points": list(self.points)}
@@ -454,6 +476,14 @@ def _symbolic_designs(points: Sequence[DesignPoint],
             points=tuple(design_name(p, with_node=False) for p in points),
             group=next(iter(groups)),
             nodes=() if node == TECH_16NM else (node.name,))
+    # multi-node corner sets: per-point (node.name, G) groups sharing one G
+    # symbolize as node-suffixed corner names (the cross-node iso-area form)
+    shared = {g[1] for g in groups if isinstance(g, tuple) and len(g) == 2}
+    if not single and len(shared) == 1:
+        g = next(iter(shared))
+        if all(p.group == (p.node.name, g) for p in points):
+            return DesignCorners(
+                points=tuple(design_name(p) for p in points), group=g)
     raise ValueError("designs with custom normalization groups have no "
                      "symbolic form; serialize grid- or corner-shaped axes")
 

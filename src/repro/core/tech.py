@@ -80,19 +80,110 @@ SCALING_EXPONENTS = {
 PERI_AREA_EXP = 2.0
 PERI_LEAK_EXP = 0.3
 
+# ---------------------------------------------------------------------------
+# Device / bitcell / periphery projection exponents
+# ---------------------------------------------------------------------------
+# One documented exponent per scaled quantity, same convention as
+# SCALING_EXPONENTS: value(node) = anchor_value * s**exp.  Ground rules
+# follow the SOT-MRAM DTCO study of Mishty & Sadi (arXiv 2303.12310) and
+# first-order MTJ scaling physics; every consumer (mtj.device,
+# bitcell.characterize, cachemodel.periphery) projects from the calibrated
+# 16 nm anchor through exactly one of these tables, so at s = 1 every
+# projection is an exact multiply-by-1.0 (bit-identical anchor outputs).
+
+# MTJ compact-model constants (mtj.MTJDevice fields).
+#   ic0:    STT critical current is retention-pinned — the thermal stability
+#           factor Delta must hold, so Ic0 barely falls with the cell (the
+#           STT scaling wall); SOT's Ic0 tracks the heavy-metal track
+#           cross-section and falls steeply (the DTCO study's headline).
+#   tau:    precessional time constant follows the free-layer moment.
+#   r_*:    junction/track resistance rises as the area shrinks at roughly
+#           constant RA product (partially thinned at advanced nodes).
+#   sense_time: TMR read window erodes slowly with junction scaling.
+MTJ_SCALING_EXPONENTS = {
+    "stt": dict(ic0_set_a=0.05, ic0_reset_a=0.05,
+                tau_set_s=1.0, tau_reset_s=1.0,
+                r_set_ohm=-1.0, r_reset_ohm=-1.0, r_read_ohm=-1.0,
+                sense_time_s=-0.15),
+    "sot": dict(ic0_set_a=0.6, ic0_reset_a=0.6,
+                tau_set_s=1.0, tau_reset_s=1.0,
+                r_set_ohm=-1.0, r_reset_ohm=-1.0, r_read_ohm=-1.0,
+                sense_time_s=-0.15),
+}
+
+# Bitcell-level constants (bitcell.py).
+#   i_read/i_write_per_fin:  MRAM access-path drive derates with vdd — the
+#       write path must hold vdd headroom across the MTJ stack, eroding as
+#       the supply scales (the infeasibility mechanism at deep nodes).
+#   area_base:  the MTJ pillar + BEOL keep-out is via/metal-pitch limited
+#       and shrinks slower than the 6T footprint, so the SRAM-normalized
+#       base term *grows* at smaller nodes (density advantage erodes — the
+#       cross-node iso-area capacity trend).
+#   area_per_fin:  access fins are front-end devices scaling with the node
+#       like the 6T cell, so their normalized contribution is flat.
+#   sram_t_rw / sram_e_rw:  intrinsic 6T CV/I time and CV^2 energy.
+BITCELL_SCALING_EXPONENTS = {
+    "i_read_per_fin": 0.15,
+    "i_write_per_fin": 0.15,
+    "area_base": -0.25,
+    "area_per_fin": 0.0,
+    "sram_t_rw": 1.15,
+    "sram_e_rw": 1.3,
+}
+
+# Periphery building blocks (cachemodel.Periphery fields).
+#   t_gate:      FO4 delay ~ C*V/I_drive (C and V fall, drive per um flat).
+#   t_sense_amp: latch resolve ~ C/gm.
+#   e_gate:      CV^2 per switched gate.
+#   htree_ns_per_mm:  repeated-wire delay per mm worsens as wire RC blows
+#       up faster than repeaters improve (partially recovered by vdd/gate
+#       gains — the classic interconnect-dominated regime).
+#   htree_pj_per_mm_bit:  wire energy per mm*bit ~ C_wire * V^2 (per-mm
+#       wire cap roughly flat, V^2 falls).
+#   c_bitline/c_wordline:  per-cell wire capacitance tracks the cell pitch.
+PERIPHERY_SCALING_EXPONENTS = {
+    "t_gate": 1.15,
+    "t_sense_amp": 1.0,
+    "e_gate": 1.3,
+    "htree_ns_per_mm": -0.5,
+    "htree_pj_per_mm_bit": 0.3,
+    "c_bitline_per_row": 1.0,
+    "c_wordline_per_col": 1.0,
+}
+
+# Validated projection range.  The exponent tables above are first-order
+# fits anchored at 16 nm and sanity-checked against the published 7 nm DTCO
+# ground rules; below 7 nm (gate-all-around territory, different MTJ
+# integration) they are extrapolation without evidence, so ``scaled_node``
+# refuses unless explicitly overridden.
+MIN_FEATURE_SIZE_M = 7e-9
+
 
 def scale_factor(node: TechNode) -> float:
     """Linear feature-size factor s of `node` relative to the 16 nm anchor."""
     return node.feature_size_m / TECH_16NM.feature_size_m
 
 
-def scaled_node(feature_size_m: float, name: str | None = None) -> TechNode:
+def scaled_node(feature_size_m: float, name: str | None = None,
+                allow_extrapolation: bool = False) -> TechNode:
     """Project the calibrated 16 nm anchor to another feature size.
 
     Applies the SCALING_EXPONENTS rules to every node parameter.  Nodes
     built here (and only these — plus the anchor itself) have a calibration
     derivation rule; ``calibration.get`` raises for hand-crafted nodes.
+
+    Projection targets below ``MIN_FEATURE_SIZE_M`` (the validated 7–16 nm
+    range) raise unless ``allow_extrapolation=True`` — the exponent tables
+    have no evidence beyond 7 nm and extrapolating silently is exactly the
+    cross-node failure mode the derivation rules exist to prevent.
     """
+    if feature_size_m < MIN_FEATURE_SIZE_M and not allow_extrapolation:
+        raise ValueError(
+            f"feature size {feature_size_m * 1e9:g} nm is below the "
+            f"validated projection range ({MIN_FEATURE_SIZE_M * 1e9:g}–"
+            f"{TECH_16NM.feature_size_m * 1e9:g} nm): the scaling exponents "
+            "are fitted to 16 nm anchors and published 7 nm ground rules "
+            "only; pass allow_extrapolation=True to project anyway")
     s = feature_size_m / TECH_16NM.feature_size_m
     label = name if name is not None else f"{feature_size_m * 1e9:g}nm-scaled"
     return TechNode(
@@ -124,8 +215,10 @@ _NODE_NAME_RE = re.compile(r"(\d+(?:\.\d+)?)nm(?:-scaled|-finfet)?\Z")
 
 def node(name: str) -> TechNode:
     """Resolve a symbolic node name: a canonical registry name
-    ("16nm-finfet", "7nm-scaled"), or any "<feature>nm" shorthand, which
-    maps to the anchor at 16 nm and to ``scaled_node`` otherwise."""
+    ("16nm-finfet", "7nm-scaled"), or any "<feature>nm" shorthand within the
+    validated projection range, which maps to the anchor at 16 nm and to
+    ``scaled_node`` otherwise.  Shorthands below ``MIN_FEATURE_SIZE_M``
+    raise — a symbolic spec has no extrapolation override by design."""
     if name in NODES:
         return NODES[name]
     m = _NODE_NAME_RE.fullmatch(name)
@@ -135,7 +228,16 @@ def node(name: str) -> TechNode:
         for n in NODES.values():
             if f"{n.feature_size_m * 1e9:g}" == m.group(1):
                 return n
-        return scaled_node(float(m.group(1)) * 1e-9)
+        feature_m = float(m.group(1)) * 1e-9
+        if feature_m < MIN_FEATURE_SIZE_M:
+            raise ValueError(
+                f"technology node {name!r} is below the validated "
+                f"{MIN_FEATURE_SIZE_M * 1e9:g}–"
+                f"{TECH_16NM.feature_size_m * 1e9:g} nm projection range; "
+                "symbolic specs cannot extrapolate (build such a node "
+                "explicitly with tech.scaled_node(..., "
+                "allow_extrapolation=True) if you really mean it)")
+        return scaled_node(feature_m)
     raise ValueError(f"unknown technology node {name!r}; canonical names: "
                      f"{sorted(NODES)} (or any '<feature>nm' shorthand)")
 

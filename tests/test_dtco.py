@@ -19,7 +19,7 @@ import dataclasses
 
 import pytest
 
-from repro.core import calibration, dtco, sweep, tech, traffic, tuner
+from repro.core import calibration, dtco, isoarea, sweep, tech, traffic, tuner
 from repro.core.cachemodel import CacheModel
 from repro.core.isocap import INFER_BATCH, TRAIN_BATCH, MEMS
 from repro.core.tech import (TECH_16NM, TECH_12NM, TECH_10NM, TECH_7NM,
@@ -92,11 +92,15 @@ def test_calibration_scaled_node_rule():
 
 
 def test_calibration_raises_without_derivation_rule():
-    handmade = TechNode(name="mystery-5nm", feature_size_m=5e-9)
+    handmade = TechNode(name="mystery-8nm", feature_size_m=8e-9)
     with pytest.raises(ValueError, match="no calibration derivation rule"):
         calibration.get("sram", handmade)
     # a scaled_node with a custom name still round-trips -> still has a rule
-    assert calibration.get("sram", scaled_node(5e-9, name="my-5nm"))
+    assert calibration.get("sram", scaled_node(8e-9, name="my-8nm"))
+    # ... even one built past the extrapolation guard (the guard protects
+    # construction, not recognition)
+    assert calibration.get(
+        "sram", scaled_node(5e-9, name="my-5nm", allow_extrapolation=True))
 
 
 def test_sram_bitcell_reads_node_leakage():
@@ -202,6 +206,103 @@ def test_lm_sweep_spec_node_axis():
     assert len(spec.designs) == 2 * len(sweep.MEMS)
     assert {p.node.name for p in spec.designs} == \
         {TECH_16NM.name, TECH_10NM.name}
+
+
+# ---------------------------------------------------------------------------
+# cross-node iso-AREA study
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_isoarea():
+    workloads = dict(list(paper_workloads().items())[:2])
+    nodes = (TECH_16NM, TECH_7NM)
+    return workloads, nodes, dtco.isoarea_analyze(workloads=workloads,
+                                                  nodes=nodes)
+
+
+def test_isoarea_rows_match_scalar_per_node_path(small_isoarea):
+    """Every iso-area cell equals the pre-batched scalar study: the
+    per-node area budget picks the capacities, a per-node CacheModel tune
+    plus traffic.energy folds produce the metrics."""
+    workloads, nodes, rows = small_isoarea
+    stages = ((False, INFER_BATCH), (True, TRAIN_BATCH))
+    it = iter(rows)
+    for node in nodes:
+        corners = isoarea.corners(3.0, node=node)
+        designs = {p.mem: tuner.tune_loop(
+                       CacheModel(p.mem, node=node), p.capacity_bytes)
+                   for p in corners}
+        reps = {(n, m, t): traffic.energy(
+                    traffic.build(w, b, t), designs[m])
+                for n, w in workloads.items()
+                for t, b in stages for m in MEMS}
+
+        def mean(fn, mem):
+            vals = [fn(reps[n, mem, t]) / fn(reps[n, "sram", t])
+                    for n in workloads for t, _ in stages]
+            return sum(vals) / len(vals)
+
+        for p in corners:
+            row = next(it)
+            assert (row.node, row.mem) == (node.name, p.mem)
+            assert row.capacity_mb == p.capacity_bytes / 2**20
+            assert row.leakage_w == pytest.approx(
+                designs[p.mem].leakage_w, rel=REL)
+            assert row.area_mm2 == pytest.approx(
+                designs[p.mem].area_mm2, rel=REL)
+            assert row.energy_x == pytest.approx(
+                mean(lambda r: r.total_j(False), p.mem), rel=REL)
+            assert row.leak_x == pytest.approx(
+                mean(lambda r: r.leak_j, p.mem), rel=REL)
+            assert row.edp_x == pytest.approx(
+                mean(lambda r: r.edp(True), p.mem), rel=REL)
+    assert next(it, None) is None
+
+
+def test_isoarea_trends_across_nodes():
+    """The study's headline: the density advantage keeps buying capacity
+    at every node (MRAM iso-area capacity stays well above the SRAM
+    budget), the EDP gap against same-node SRAM widens monotonically as
+    the node shrinks, and the SRAM baseline's leakage blows up."""
+    rows = dtco.isoarea_analyze(
+        workloads=dict(list(paper_workloads().items())[:1]))
+    by = {(r.node, r.mem): r for r in rows}
+    names = [n.name for n in dtco.NODES]
+    sram_w = [by[n, "sram"].leakage_w for n in names]
+    assert sram_w == sorted(sram_w) and sram_w[-1] > sram_w[0]
+    for mem in ("stt", "sot"):
+        caps = [by[n, mem].capacity_mb for n in names]
+        assert all(c > by[names[0], "sram"].capacity_mb for c in caps), mem
+        assert caps == sorted(caps, reverse=True), \
+            f"{mem} iso-area capacity must not grow as the node shrinks"
+        edp = [by[n, mem].edp_x for n in names]
+        assert edp == sorted(edp, reverse=True), \
+            f"{mem} EDP gap vs same-node SRAM must widen monotonically"
+        leak = [by[n, mem].leak_x for n in names]
+        assert leak == sorted(leak, reverse=True), mem
+
+
+def test_isoarea_normalizes_per_node(small_isoarea):
+    """Each node's SRAM corner is its own baseline."""
+    _, _, rows = small_isoarea
+    for r in rows:
+        if r.mem == "sram":
+            for f in ("energy_x", "leak_x", "edp_x", "runtime_x"):
+                assert getattr(r, f) == pytest.approx(1.0, rel=1e-12)
+
+
+def test_fig_dtco_isoarea_benchmark_quick():
+    from benchmarks import fig_dtco_isoarea
+    out = fig_dtco_isoarea.run(quick=True)
+    assert "isoarea_cap" in out["derived"]
+    assert len(out["rows"]) == 2 * len(MEMS)
+    assert {r["node"] for r in out["rows"]} == \
+        {TECH_16NM.name, TECH_7NM.name}
+    b = out["bench"]
+    assert b["stt_cap_mb_last"] > 3 and b["sot_cap_mb_last"] > 3
+    assert b["stt_edp_reduction_last"] > 1
+    assert b["sram_leak_growth"] > 1
 
 
 def test_fig_dtco_benchmark_quick():

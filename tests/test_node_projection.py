@@ -1,0 +1,206 @@
+"""Anchor-identity and node-projection properties of the DTCO layer.
+
+The node-aware refactor threads real scaling through mtj -> bitcell ->
+periphery -> engine; these tests pin its two load-bearing promises:
+
+  anchor identity   at the 16 nm anchor every projected quantity is the
+                    calibrated constant bit-for-bit (s = 1.0 multiplies
+                    are exact), so Table I / Table II and every golden
+                    spec are unchanged by construction;
+  real projection   at any other node the same quantities measurably
+                    differ (no anchor constants in disguise), the
+                    batched engine matches the scalar per-node path to
+                    <= 1e-12, mixed-node sweeps split bit-exactly into
+                    their single-node evaluations, and the deep-node
+                    failure modes (STT scaling wall, sub-7 nm guard)
+                    raise actionable diagnostics.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import bitcell, cachemodel, dtco, engine, mtj, tech, tuner
+from repro.core.cachemodel import CacheModel, PERIPHERY_FIELDS, periphery
+from repro.core.tech import TECH_16NM, TECH_7NM, scaled_node
+
+REL = 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Anchor identity: 16 nm is bit-for-bit the calibrated fixed point
+# ---------------------------------------------------------------------------
+
+
+def test_mtj_device_anchor_identity():
+    assert mtj.device("stt", TECH_16NM) == mtj.STT_16NM
+    assert mtj.device("sot", TECH_16NM) == mtj.SOT_16NM
+    assert mtj.device("stt") == mtj.device("stt", TECH_16NM)
+
+
+def test_periphery_anchor_identity():
+    p = periphery(TECH_16NM)
+    assert p == cachemodel._PERIPHERY_16NM
+    assert periphery() == p
+    # the engine's baked anchor row (the bit-identity trace) agrees too
+    assert engine._PERI_16NM_ROW == tuple(
+        getattr(p, f) for f in PERIPHERY_FIELDS)
+
+
+# Exact Table I values produced by the pre-refactor anchor-pinned code
+# (sense_lat, sense_e, wlat_set, we_set, area_norm, read_current, fr, fw).
+_TABLE1_HEAD = {
+    "sram": (1.2e-10, 1.3e-15, 1.2e-10, 1.3e-15, 1.0, 8.4e-05, 2, 2),
+    "stt": (6.5e-10, 7.644e-14, 8.400000000000002e-09,
+            1.1000586240000003e-12, 0.33999999999999997, 0.000147, 4, 4),
+    "sot": (6.5e-10, 2.0020000000000003e-14, 3.1307692307692307e-10,
+            8.002358861538462e-14, 0.29, 3.85e-05, 1, 3),
+}
+
+
+def test_bitcell_table1_anchor_bit_identical():
+    for name, (slat, se, wlat, we, area, iread, fr, fw) in \
+            _TABLE1_HEAD.items():
+        c = bitcell.characterize(name, TECH_16NM)
+        assert c.sense_latency_s == slat, name
+        assert c.sense_energy_j == se, name
+        assert c.write_latency_set_s == wlat, name
+        assert c.write_energy_set_j == we, name
+        assert c.area_norm == area, name
+        assert c.read_current_a == iread, name
+        assert (c.fins_read, c.fins_write) == (fr, fw), name
+
+
+# Exact Table II values produced by the pre-refactor anchor-pinned code
+# (read_lat_s, write_lat_s, read_e_j, write_e_j, leak_w, area_mm2).
+_TABLE2_HEAD = {
+    "sram": (2.9100000000000005e-09, 1.53e-09, 3.4999999999999993e-10,
+             3.2000000000000003e-10, 6.442749179585304, 5.531051665241455),
+    "stt": (2.9799999999999996e-09, 9.31e-09, 8.100000000000001e-10,
+            3.1e-10, 0.7479188256318854, 2.340150966085292),
+    "sot": (3.7100000000000002e-09, 1.38e-09, 4.900000000000001e-10,
+            2.2000000000000002e-10, 0.5271832675931994, 1.950000577897137),
+    "stt_isoarea": (3.3284014911279853e-09, 9.599874115459549e-09,
+                    9.307037715129982e-10, 3.262352827822285e-10,
+                    1.7059247403657152, 5.120080454437546),
+    "sot_isoarea": (4.301232253914615e-09, 1.7801081683908728e-09,
+                    6.821705102042964e-10, 2.9462996334119443e-10,
+                    1.4350523897287781, 5.6401255233758),
+}
+
+
+def test_table2_anchor_bit_identical():
+    t2 = tuner.table2()
+    assert set(t2) == set(_TABLE2_HEAD)
+    for name, (rlat, wlat, re, we, leak, area) in _TABLE2_HEAD.items():
+        d = t2[name]
+        got = (d.read_latency_s, d.write_latency_s, d.read_energy_j,
+               d.write_energy_j, d.leakage_w, d.area_mm2)
+        assert got == (rlat, wlat, re, we, leak, area), name
+
+
+# ---------------------------------------------------------------------------
+# Real projection: 7 nm measurably differs everywhere
+# ---------------------------------------------------------------------------
+
+
+def test_7nm_device_and_periphery_differ_from_anchor():
+    for flavor in ("stt", "sot"):
+        dev = mtj.device(flavor, TECH_7NM)
+        anchor = mtj.device(flavor, TECH_16NM)
+        for f in tech.MTJ_SCALING_EXPONENTS[flavor]:
+            assert getattr(dev, f) != getattr(anchor, f), (flavor, f)
+    p7, p16 = periphery(TECH_7NM), periphery(TECH_16NM)
+    for f, e in tech.PERIPHERY_SCALING_EXPONENTS.items():
+        if e != 0.0:
+            assert getattr(p7, f) != getattr(p16, f), f
+
+
+def test_7nm_designs_differ_from_anchor():
+    for mem in ("sram", "stt", "sot"):
+        d7 = tuner.tuned_design(mem, 3, node=TECH_7NM)
+        d16 = tuner.tuned_design(mem, 3, node=TECH_16NM)
+        assert d7.read_latency_s != d16.read_latency_s, mem
+        assert d7.leakage_w != d16.leakage_w, mem
+        assert d7.area_mm2 != d16.area_mm2, mem
+
+
+# ---------------------------------------------------------------------------
+# Scalar-vs-batched parity at every DTCO node
+# ---------------------------------------------------------------------------
+
+
+_FLOAT_FIELDS = ("read_latency_s", "write_latency_s", "read_energy_j",
+                 "write_energy_j", "leakage_w", "area_mm2")
+
+
+@pytest.mark.parametrize("node", dtco.NODES, ids=lambda n: n.name)
+def test_engine_matches_scalar_path_at_node(node):
+    for mem in ("sram", "stt", "sot"):
+        scalar = tuner.tune_loop(CacheModel(mem, node=node), 3 * 2**20)
+        batched = tuner.tuned_design(mem, 3, node=node)
+        assert batched.org == scalar.org, (node.name, mem)
+        for f in _FLOAT_FIELDS:
+            assert getattr(batched, f) == pytest.approx(
+                getattr(scalar, f), rel=REL), (node.name, mem, f)
+
+
+def test_mixed_node_sweep_splits_bit_exactly():
+    """A multi-node sweep routes the anchor row through the anchor trace
+    and scaled rows through the runtime trace; each node's slice must be
+    bit-identical to that node's own single-node sweep."""
+    caps = (3 * 2**20,)
+    mixed = engine.sweep(caps, nodes=(TECH_16NM, TECH_7NM))
+    for i, node in enumerate((TECH_16NM, TECH_7NM)):
+        single = engine.sweep(caps, nodes=node)
+        for f in _FLOAT_FIELDS:
+            a = getattr(mixed, f)[i]
+            b = getattr(single, f)[0]
+            assert np.array_equal(a, b), (node.name, f)
+
+
+# ---------------------------------------------------------------------------
+# Deep-node failure modes
+# ---------------------------------------------------------------------------
+
+
+def test_stt_scaling_wall_diagnostic():
+    """Past the validated range the STT drive derates below the
+    retention-pinned critical current; the diagnostic says so instead of
+    silently returning an empty sweep."""
+    node = scaled_node(2e-9, name="2nm-extrap", allow_extrapolation=True)
+    with pytest.raises(ValueError,
+                       match="no feasible stt bitcell.*critical current"):
+        bitcell.characterize("stt", node)
+
+
+def test_sub_7nm_projection_guard():
+    with pytest.raises(ValueError, match="validated projection range"):
+        scaled_node(5e-9)
+    n = scaled_node(5e-9, name="5nm-extrap", allow_extrapolation=True)
+    assert n.feature_size_m == 5e-9
+    assert n.sram_cell_leak_w > TECH_7NM.sram_cell_leak_w
+    assert tech.MIN_FEATURE_SIZE_M == 7e-9
+
+
+def test_scaled_node_rejects_at_and_past_guard_boundary():
+    assert scaled_node(tech.MIN_FEATURE_SIZE_M).feature_size_m == 7e-9
+    with pytest.raises(ValueError, match="validated projection range"):
+        scaled_node(tech.MIN_FEATURE_SIZE_M - 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Engine trace economy
+# ---------------------------------------------------------------------------
+
+
+def test_engine_needs_no_new_trace_per_node():
+    """Node parameters are runtime tensor rows: once the anchor trace and
+    the runtime trace exist for a shape, new node values must not
+    recompile (the property that keeps cross-node sweeps one compile)."""
+    caps = (3 * 2**20,)
+    engine.sweep(caps, nodes=TECH_16NM)
+    engine.sweep(caps, nodes=scaled_node(13e-9, name="warm-13nm"))
+    base = engine._ppa_kernel._cache_size()
+    for nm in (11.0, 9.0):
+        engine.sweep(caps, nodes=scaled_node(nm * 1e-9, name=f"t-{nm:g}nm"))
+    assert engine._ppa_kernel._cache_size() == base

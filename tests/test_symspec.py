@@ -30,7 +30,7 @@ import pytest
 from benchmarks import lm_nvm
 from repro import scenarios, sweep_cli
 from repro.core import dtco, isocap, sweep, tech, workload_engine, workloads
-from repro.core.sweep import DesignGrid, SymbolicSweepSpec
+from repro.core.sweep import DesignCorners, DesignGrid, SymbolicSweepSpec
 from repro.core.tech import TECH_16NM, TECH_7NM, TECH_12NM
 
 SPEC_DIR = os.path.join(os.path.dirname(__file__), "..", "specs")
@@ -69,8 +69,12 @@ def test_node_registry():
     assert tech.node("16nm") is TECH_16NM
     assert tech.node("7nm-scaled") is TECH_7NM
     assert tech.node("7nm") == TECH_7NM
-    # arbitrary projections resolve through scaled_node (calibratable)
-    assert tech.node("5nm").feature_size_m == pytest.approx(5e-9)
+    # arbitrary in-range projections resolve through scaled_node
+    assert tech.node("8nm").feature_size_m == pytest.approx(8e-9)
+    # ... but shorthands below the validated projection range error out
+    # (symbolic specs cannot carry allow_extrapolation)
+    with pytest.raises(ValueError, match="below the validated"):
+        tech.node("5nm")
     with pytest.raises(ValueError):
         tech.node("16lpp")
 
@@ -177,12 +181,34 @@ def test_corners_registry_form():
     assert pts == sweep.design_corners(
         (("sram", 3), ("stt", 7), ("sot", 10)),
         nodes=(TECH_16NM, TECH_7NM))
-    # corner names must not smuggle nodes past the 'nodes' field
-    with pytest.raises(ValueError):
+    # corner names must not smuggle nodes past a non-empty 'nodes' field
+    with pytest.raises(ValueError, match="must not name a node"):
         SymbolicSweepSpec(
             scenarios=("cnn/alexnet/infer@b4",),
-            designs=sweep.DesignCorners(points=("stt@7MB@7nm",))
+            designs=sweep.DesignCorners(points=("stt@7MB@7nm",),
+                                        nodes=("16nm",))
         ).design_points()
+
+
+def test_corners_node_suffixed_points():
+    """Node-suffixed corners (empty 'nodes' field) carry per-node
+    capacities — the cross-node iso-area axis."""
+    corners = sweep.DesignCorners(points=(
+        "sram@3MB", "stt@7MB",
+        "sram@3MB@7nm-scaled", "stt@4MB@7nm-scaled"))
+    pts = corners.resolved_points()
+    assert [(p.mem, p.capacity_mb, p.node.name, p.group) for p in pts] == [
+        ("sram", 3.0, "16nm-finfet", ("16nm-finfet", 0)),
+        ("stt", 7.0, "16nm-finfet", ("16nm-finfet", 0)),
+        ("sram", 3.0, "7nm-scaled", ("7nm-scaled", 0)),
+        ("stt", 4.0, "7nm-scaled", ("7nm-scaled", 0)),
+    ]
+    # the symbolic inverse reproduces the node-suffixed corner set
+    assert sweep._symbolic_designs(pts) == corners
+    # a suffixed set on ONE (non-anchor) node keeps the bare group
+    one = sweep.DesignCorners(points=("sram@3MB@7nm", "stt@4MB@7nm"))
+    assert all(p.group == 0 and p.node == TECH_7NM
+               for p in one.resolved_points())
 
 
 # ---------------------------------------------------------------------------
@@ -289,6 +315,13 @@ def test_golden_dtco_resolves_to_analysis_spec():
     assert sym.run() is sweep.run(dtco.spec())
 
 
+def test_golden_dtco_isoarea_resolves_to_analysis_spec():
+    sym = sweep.load_spec(spec_path("dtco_isoarea.json"))
+    assert isinstance(sym.designs, DesignCorners)
+    assert sym.resolve() == dtco.isoarea_spec()
+    assert sym.run() is sweep.run(dtco.isoarea_spec())
+
+
 def test_golden_lm_nvm_resolves_to_analysis_spec():
     sym = sweep.load_spec(spec_path("lm_nvm.json"))
     assert sym.resolve() == lm_nvm.spec()
@@ -298,8 +331,8 @@ def test_golden_lm_nvm_resolves_to_analysis_spec():
 def test_golden_files_are_normalized():
     """The checked-in documents are exactly what to_json emits (no drift
     between the files and the schema)."""
-    for name in ("isocap.json", "dtco.json", "lm_nvm.json",
-                 "mixed_cnn_lm.json"):
+    for name in ("isocap.json", "dtco.json", "dtco_isoarea.json",
+                 "lm_nvm.json", "mixed_cnn_lm.json"):
         text = open(spec_path(name)).read()
         assert SymbolicSweepSpec.from_json(text).to_json() == text, name
 
