@@ -49,6 +49,7 @@ MODULES = (
     "bench_workload_engine",
     "bench_sweep",
     "bench_shard",
+    "bench_serve",
 )
 
 

@@ -498,17 +498,50 @@ def load_spec(path: str) -> SymbolicSweepSpec:
 # ---------------------------------------------------------------------------
 
 
-def lower_designs(points: Sequence[DesignPoint],
+def lower_designs(points: Sequence[DesignPoint], pad_caps: bool = False,
                   ) -> tuple[engine.DesignTable, tuple[CacheDesign, ...]]:
     """One memoized ``engine.design_table`` over the unique nodes, mems,
     and capacities, then the EDAP-tuned design of every point (Algorithm 1,
-    memoized per (node, mem, capacity) on the table)."""
+    memoized per (node, mem, capacity) on the table).
+
+    ``pad_caps`` pads the capacity axis to its power-of-two bucket with
+    deterministic dummy capacities before the circuit call and slices the
+    table back to the real axis after tuning, so the PPA kernel only ever
+    compiles at O(log) capacity counts — the sweep service's warmup-able
+    path.  Tuning is a per-(node, mem, capacity) argmin over the
+    organization axis, so the tuned designs are bit-identical to the
+    unpadded ones; only the kernel *shape* changes."""
     nodes = tuple(dict.fromkeys(p.node for p in points))
     mems = tuple(dict.fromkeys(p.mem for p in points))
     caps = tuple(dict.fromkeys(p.capacity_bytes for p in points))
-    table = engine.design_table(mems, caps, nodes=nodes)
-    return table, tuple(table.tuned(p.mem, p.capacity_bytes, node=p.node)
-                        for p in points)
+    lowered = _pad_capacities(caps) if pad_caps else caps
+    table = engine.design_table(mems, lowered, nodes=nodes)
+    designs = tuple(table.tuned(p.mem, p.capacity_bytes, node=p.node)
+                    for p in points)
+    if lowered is not caps:
+        # drop the dummy columns; Algorithm-1 winners carry over
+        table = table.subset(capacities_bytes=caps)
+    return table, designs
+
+
+def _pad_capacities(caps: tuple[int, ...]) -> tuple[int, ...]:
+    """Pad a unique-capacity tuple to its power-of-two bucket with dummy
+    capacities just above the real maximum (64-byte steps, skipping any
+    collision with a real value) — deterministic, so the padded tuple and
+    therefore the ``engine.design_table`` memo key are stable per real
+    capacity set."""
+    target = workload_engine.axis_bucket(len(caps))
+    if target == len(caps):
+        return caps
+    used = set(caps)
+    pad: list[int] = []
+    c = max(caps)
+    while len(caps) + len(pad) < target:
+        c += 64
+        if c not in used:
+            pad.append(c)
+            used.add(c)
+    return caps + tuple(pad)
 
 
 @functools.lru_cache(maxsize=None)
@@ -788,6 +821,51 @@ def merge_results(parts: Iterable[SweepResult],
                        designs=tuple(designs), tables=tables)
 
 
+# -- union: superset spec of compatible requests (service coalescing) -------
+
+
+def spec_union(specs: Sequence[SweepSpec], name: str | None = None,
+               ) -> SweepSpec:
+    """The smallest spec covering every member — the coalescing superset
+    the concurrent sweep service evaluates once and slices per-request
+    views out of (``SweepResult.subset``, the inverse of ``merge``).
+
+    Compatibility rule: every member must declare the identical platform
+    axis (same platforms, same order) — platform count changes the fold's
+    compiled shape and a mismatched axis cannot share one evaluation.
+    Scenario axes union by (workload, batch, training) key and design axes
+    by DesignPoint identity (which includes the normalization group, so
+    the same (mem, capacity, node) under two groupings stays two columns),
+    both in first-seen order.  ``baseline_mem`` need *not* agree: each
+    request's subset result carries the request's own spec, so
+    normalization happens per request, never on the union.
+    """
+    specs = tuple(specs)
+    if not specs:
+        raise ValueError("spec_union needs at least one spec")
+    first = specs[0]
+    for sp in specs[1:]:
+        if sp.platforms != first.platforms:
+            raise ValueError(
+                f"incompatible specs: {sp.name!r} declares a different "
+                f"platform axis than {first.name!r}")
+    if len(specs) == 1:
+        return first
+    scen: dict[tuple, TrafficStats] = {}
+    points: dict[DesignPoint, None] = {}
+    for sp in specs:
+        for s in sp.scenarios:
+            scen.setdefault(_scenario_key(s), s)
+        for p in sp.designs:
+            points.setdefault(p)
+    return SweepSpec(
+        name=name if name is not None else f"union[{len(specs)}]",
+        scenarios=tuple(scen.values()),
+        designs=tuple(points),
+        platforms=first.platforms,
+        baseline_mem=first.baseline_mem)
+
+
 # ---------------------------------------------------------------------------
 # Result: labeled axes + tidy views
 # ---------------------------------------------------------------------------
@@ -813,6 +891,48 @@ class SweepResult:
         """Order-invariant reassembly of disjoint partial results — see
         :func:`merge_results`."""
         return merge_results(parts, spec=spec)
+
+    def subset(self, spec: SweepSpec) -> SweepResult:
+        """Slice this result down to a member spec — the inverse of
+        ``merge`` and the per-request view of a coalesced superset
+        evaluation (:func:`spec_union`).
+
+        Every scenario key, design point, and platform of ``spec`` must be
+        present in this result (axes may reorder).  The returned result
+        carries ``spec`` itself — including its own ``baseline_mem`` and
+        normalization groups — so ``rows()``/``summary()`` match an
+        individual evaluation of ``spec``; no metric is recomputed, only
+        sliced."""
+        s_index = {k: i for i, k in enumerate(self.scenario_labels)}
+        d_index = {p: j for j, p in enumerate(self.spec.designs)}
+        p_index = {p: i for i, p in enumerate(self.spec.platforms)}
+        try:
+            srows = [s_index[_scenario_key(s)] for s in spec.scenarios]
+            dcols = [d_index[p] for p in spec.designs]
+            prows = [p_index[p] for p in spec.platforms]
+        except KeyError as e:
+            raise ValueError(f"subset spec {spec.name!r} has an axis label "
+                             f"outside this result: {e}") from None
+        block = np.ix_(srows, dcols)
+        keys = tuple(_scenario_key(s) for s in spec.scenarios)
+        designs = tuple(self.designs[j] for j in dcols)
+        sd_fields = _SHARED_SD + workload_engine._PLATFORM_DEPENDENT
+        tables = tuple(
+            workload_engine.WorkloadTable(
+                scenarios=keys, designs=designs,
+                platform=self.spec.platforms[pi],
+                **{f: getattr(self.tables[pi], f)[srows]
+                   for f in _SHARED_S},
+                **{f: getattr(self.tables[pi], f)[block]
+                   for f in sd_fields})
+            for pi in prows)
+        table = self.design_table.subset(
+            mems=tuple(dict.fromkeys(p.mem for p in spec.designs)),
+            capacities_bytes=tuple(dict.fromkeys(p.capacity_bytes
+                                                 for p in spec.designs)),
+            nodes=tuple(dict.fromkeys(p.node for p in spec.designs)))
+        return SweepResult(spec=spec, design_table=table, designs=designs,
+                           tables=tables)
 
     # -- labeled axes ------------------------------------------------------
 

@@ -111,6 +111,28 @@ def pad_width(k: int) -> int:
     return w
 
 
+# Scenario/design axis-bucket floors of the bucketed (service) fold path:
+# requests below the floor share the floor's compiled shape, so tiny specs
+# don't each pin their own trace.
+S_BUCKET_FLOOR = 4
+D_BUCKET_FLOOR = 4
+
+
+def axis_bucket(n: int, floor: int = 1) -> int:
+    """Batch-axis shape bucket: the next power of two >= max(n, floor).
+
+    The ``pad_width`` idea generalized to the scenario and design axes —
+    the bucketed fold pads every axis to its bucket, so the set of
+    compiled kernel shapes stays O(log^3) over arbitrary request sizes
+    (the property that makes ``warmup`` able to pre-trace them all)."""
+    if n < 1:
+        raise ValueError("axis_bucket needs n >= 1")
+    w = max(1, floor)
+    while w < n:
+        w *= 2
+    return w
+
+
 def pack(stats_seq: Sequence[TrafficStats],
          width: int | None = None) -> StreamBatch:
     """Pack scenarios into padded [scenario, stream] tensors.
@@ -489,6 +511,113 @@ def evaluate_chunk_group(chunk_stats: Sequence[Sequence[TrafficStats]],
                          batches[i].keys, tuple(chunk_designs[i]),
                          tuple(platforms))
             for i in range(g)]
+
+
+# ---------------------------------------------------------------------------
+# Bucketed evaluation + warmup (the concurrent sweep service's fold path)
+# ---------------------------------------------------------------------------
+
+
+def _pad_axis(a: np.ndarray, n: int, fill) -> np.ndarray:
+    """Pad the leading axis of ``a`` to length ``n`` with ``fill``."""
+    if a.shape[0] == n:
+        return a
+    out = np.full((n,) + a.shape[1:], fill, dtype=a.dtype)
+    out[:a.shape[0]] = a
+    return out
+
+
+def evaluate_bucketed(stats_seq: Sequence[TrafficStats],
+                      designs: Sequence[CacheDesign],
+                      platforms: Sequence[Platform] = (GTX_1080TI,),
+                      ) -> tuple[WorkloadTable, ...]:
+    """Shape-bucketed, uncached fold — the sweep service's evaluation path.
+
+    Pads the scenario axis, the design axis, and the stream width each to
+    its power-of-two bucket and slices the real cells back out of the
+    kernel output.  Padding is inert by construction: scenario rows carry
+    zero bytes, infinite reuse distance, zero MACs, and a False mask;
+    design columns are all-zero vectors (zero capacity means every stream
+    misses, but the column is dropped before anything reads it).  The set
+    of compiled kernel shapes is therefore O(log^3) over arbitrary
+    request sizes — exactly the shapes :func:`warmup` pre-traces, which
+    is what makes a warmed service answer never-seen specs at warm cost.
+
+    Values match ``evaluate_platforms`` at <= 1e-12 relative (padding
+    reassociates the stream reductions, so bit-identity is not claimed).
+    Deliberately uncached like ``evaluate_chunk``: the service layers its
+    own bounded result cache on top.
+    """
+    stats_seq = tuple(stats_seq)
+    designs = tuple(designs)
+    platforms = tuple(platforms)
+    s, d = len(stats_seq), len(designs)
+    sp = axis_bucket(s, S_BUCKET_FLOOR)
+    dp = axis_bucket(d, D_BUCKET_FLOOR)
+    width = pad_width(max(len(x.streams) for x in stats_seq))
+    batch = pack(stats_seq, width=width)
+    bt = _pad_axis(batch.bytes_total, sp, 0.0)
+    iw = _pad_axis(batch.is_write, sp, False)
+    rd = _pad_axis(batch.reuse_distance, sp, np.inf)
+    vis = _pad_axis(batch.dram_visible, sp, False)
+    mask = _pad_axis(batch.mask, sp, False)
+    macs = _pad_axis(batch.macs, sp, 0.0)
+    vecs = [np.pad(v, (0, dp - d)) for v in _design_vectors(designs)]
+    pmat = np.stack([_platform_vector(p) for p in platforms])
+    with enable_x64():
+        out = _fold_kernel(bt, iw, rd, vis, mask, macs, *vecs, pmat)
+    sliced = {}
+    for k, v in out.items():
+        v = np.asarray(v)
+        if v.ndim == 1:                 # [s] platform-independent
+            sliced[k] = v[:s]
+        elif v.ndim == 2:               # [s, d] platform-independent
+            sliced[k] = v[:s, :d]
+        else:                           # [p, s, d]
+            sliced[k] = v[:, :s, :d]
+    return _tables_from(sliced, batch.keys, designs, platforms)
+
+
+def fold_shape(n_scenarios: int, max_streams: int, n_designs: int,
+               n_platforms: int) -> tuple[int, int, int, int]:
+    """The (s, k, d, p) kernel shape ``evaluate_bucketed`` compiles for
+    these axis sizes — the unit of warmup."""
+    return (axis_bucket(n_scenarios, S_BUCKET_FLOOR), pad_width(max_streams),
+            axis_bucket(n_designs, D_BUCKET_FLOOR), int(n_platforms))
+
+
+def warmup_fold(shape: tuple[int, int, int, int]) -> None:
+    """Compile (and prime the jit dispatch cache for) the fold kernel at
+    one bucketed (s, k, d, p) shape by folding inert dummy data — the
+    same argument shapes/dtypes ``evaluate_bucketed`` dispatches, so a
+    later real request at this shape pays only numeric work (~ms), not
+    the XLA compile (~0.5 s)."""
+    s, k, d, p = shape
+    zeros_sk = np.zeros((s, k))
+    false_sk = np.zeros((s, k), dtype=bool)
+    vec = np.zeros(d)
+    pmat = np.ones((p, len(PLATFORM_FIELDS)))  # ones: no 0-divides
+    with enable_x64():
+        _fold_kernel(zeros_sk, false_sk, np.full((s, k), np.inf), false_sk,
+                     false_sk, np.zeros(s), vec, vec, vec, vec, vec,
+                     np.ones(d), pmat)
+
+
+def warmup(scenario_buckets: Sequence[int] = (S_BUCKET_FLOOR, 16),
+           width_buckets: Sequence[int] = (16, 1024),
+           design_buckets: Sequence[int] = (D_BUCKET_FLOOR, 16),
+           platform_counts: Sequence[int] = (1, 2)) -> int:
+    """Pre-trace the fold kernel over a grid of common bucketed shapes
+    (spec-independent warmup; the service's spec-driven warmup compiles
+    exact request shapes instead).  Returns the number of distinct shapes
+    compiled.  The defaults cover small CNN/LM specs (width 16) and the
+    wide-scenario regime (googlenet train packs at width 1024)."""
+    shapes = {fold_shape(s, k, d, p)
+              for s in scenario_buckets for k in width_buckets
+              for d in design_buckets for p in platform_counts}
+    for shape in sorted(shapes):
+        warmup_fold(shape)
+    return len(shapes)
 
 
 def dram_tx(stats_seq: Sequence[TrafficStats],

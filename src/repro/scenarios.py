@@ -14,7 +14,12 @@ Both scenario kinds live under one namespace, resolved by :func:`resolve`
 (the symbolic SweepSpec v2 scenario axis, core/sweep.py):
 
     cnn/<workload>/<stage>@b<batch>   e.g. "cnn/resnet18/train@b64"
-    lm/<arch>/<shape>                 e.g. "lm/qwen3-14b/decode_32k"
+    lm/<arch>/<shape>[@b<batch>]      e.g. "lm/qwen3-14b/decode_32k@b8"
+
+The LM ``@b<n>`` suffix overrides the shape's default global batch
+(``configs.base.SHAPES``), so serving-fleet batch mixes sweep as
+first-class scenario cells; the bare name keeps the registered default
+batch (the historical LM-study rows are unchanged).
 
 ``name_of`` is the inverse (used to serialize concrete specs), and a
 heterogeneous spec may mix both kinds on one scenario axis — they fold in
@@ -28,6 +33,7 @@ simply have no row for that shape.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from collections.abc import Sequence
 
@@ -42,16 +48,30 @@ from repro.launch import flops as flops_mod
 # sub-quadratic architectures (see lm_supported).
 LM_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
 LM_CAPACITY_MB = 48  # TPU-class last-level on-chip buffer (VMEM regime)
+# Registered batch overrides of the LM namespace (``@b<n>``) — the
+# serving-fleet batch mix axis exposed through names()/the sweep service.
+LM_BATCHES = (1, 8, 32)
 
 
 @functools.lru_cache(maxsize=None)
-def lm_traffic(arch: str, shape_name: str) -> TrafficStats:
+def lm_traffic(arch: str, shape_name: str,
+               batch: int | None = None) -> TrafficStats:
     """AccessStreams of one step of an (arch x shape) cell, from the same
     analytic model the roofline uses.  Memoized: scenarios are shared
     across sweeps the same way ``workload_engine.stats_for`` shares the
-    paper workloads."""
+    paper workloads.  ``batch`` overrides the shape's default global
+    batch; the scenario's workload key then carries an ``@b<n>`` suffix
+    so ``name_of`` stays the inverse of ``resolve`` and the cell never
+    collides with the default-batch one on a scenario axis."""
     cfg = configs.get(arch)
     shape = SHAPES[shape_name]
+    key = f"{arch}/{shape_name}"
+    if batch is not None:
+        if not isinstance(batch, int) or batch < 1:
+            raise ValueError(f"LM batch override must be a positive int, "
+                             f"got {batch!r}")
+        shape = dataclasses.replace(shape, global_batch=batch)
+        key += f"@b{batch}"
     acct = flops_mod.account(cfg, shape)
     tokens = shape.global_batch * (1 if shape.is_decode else shape.seq_len)
     d = cfg.d_model
@@ -74,7 +94,7 @@ def lm_traffic(arch: str, shape_name: str) -> TrafficStats:
     # KV-less cells (e.g. training) must not emit zero-byte streams: they
     # would pollute the packed fold with degenerate entries
     streams = [s for s in streams if s.bytes_total > 0]
-    return TrafficStats(f"{arch}/{shape_name}", shape.global_batch,
+    return TrafficStats(key, shape.global_batch,
                         shape.kind == "train", tuple(streams),
                         macs_per_batch=acct.flops / 2.0)
 
@@ -122,7 +142,12 @@ def resolve(name: str) -> TrafficStats:
         return workload_engine.stats_for(workloads.get(workload_name),
                                          int(batch_s), _STAGES[stage])
     if kind == "lm":
-        arch, _, shape = rest.partition("/")
+        arch, _, shape_spec = rest.partition("/")
+        shape, sep, batch_s = shape_spec.partition("@b")
+        if sep and (not batch_s.isdigit() or int(batch_s) < 1):
+            raise ValueError(f"bad LM scenario {name!r}: expected "
+                             "'lm/<arch>/<shape>[@b<batch>]' with a "
+                             "positive batch")
         if shape not in SHAPES:
             raise ValueError(f"bad LM scenario {name!r}: unknown shape "
                              f"{shape!r}; available: {sorted(SHAPES)}")
@@ -132,7 +157,7 @@ def resolve(name: str) -> TrafficStats:
         if not lm_supported(arch, shape):
             raise ValueError(f"unsupported LM scenario {name!r}: "
                              f"{shape} needs a sub-quadratic architecture")
-        return lm_traffic(arch, shape)
+        return lm_traffic(arch, shape, int(batch_s) if sep else None)
     raise ValueError(f"unknown scenario namespace in {name!r}: expected "
                      "'cnn/...' or 'lm/...'")
 
@@ -147,14 +172,17 @@ def name_of(stats: TrafficStats) -> str:
 
 
 def names(cnn_stages: Sequence[tuple[bool, int]] = ((False, 4), (True, 64)),
-          ) -> tuple[str, ...]:
+          lm_batches: Sequence[int] = LM_BATCHES) -> tuple[str, ...]:
     """Every scenario name the registry resolves, CNNs at the given
-    (training, batch) stages (the namespace is batch-parametric, so the
-    CNN side enumerates representative stages only)."""
+    (training, batch) stages and LM cells at the default batch plus each
+    registered ``@b<n>`` override (both namespaces are batch-parametric,
+    so representative batches only are enumerated)."""
     cnn = tuple(f"cnn/{w}/{'train' if t else 'infer'}@b{b}"
                 for w in workloads.registry() for t, b in cnn_stages)
-    lm = tuple(f"lm/{a}/{s}" for a in configs.all_archs() for s in LM_SHAPES
-               if lm_supported(a, s))
+    lm = tuple(f"lm/{a}/{s}{suffix}"
+               for a in configs.all_archs() for s in LM_SHAPES
+               if lm_supported(a, s)
+               for suffix in ("",) + tuple(f"@b{b}" for b in lm_batches))
     return cnn + lm
 
 

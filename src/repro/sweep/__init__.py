@@ -6,7 +6,10 @@ SweepSpec v2 document layer so consumers address one namespace:
     from repro import sweep
     result = sweep.load_spec("spec.json").run()
 
-``python -m repro.sweep run|show|serve`` dispatches to repro.sweep_cli.
+``python -m repro.sweep run|show|serve`` dispatches to repro.sweep_cli;
+the concurrent service layer (transports, coalescing, cache, warmup)
+lives in ``repro.sweep.service`` with a stdlib client in
+``repro.sweep.client``.
 """
 
 from repro.core.sweep import (  # noqa: F401
@@ -25,19 +28,35 @@ from repro.core.sweep import (  # noqa: F401
     group_label,
     iter_shards,
     load_spec,
+    lower_designs,
     merge_results,
     n_cells,
     parse_design,
     run,
     run_sharded,
+    spec_union,
     split,
     workload_scenarios,
 )
+from repro.sweep.service import (  # noqa: F401
+    Coalescer,
+    ResultCache,
+    SweepHTTPServer,
+    SweepService,
+    SweepUnixServer,
+    enable_compilation_cache,
+    evaluate_spec,
+    serve_stdio,
+    spec_key,
+)
 
 __all__ = [
-    "SCHEMA", "DesignCorners", "DesignGrid", "DesignPoint", "ShardPlan",
-    "SweepResult", "SweepSpec", "SweepView", "SymbolicSweepSpec",
-    "design_corners", "design_grid", "design_name", "group_label",
-    "iter_shards", "load_spec", "merge_results", "n_cells", "parse_design",
-    "run", "run_sharded", "split", "workload_scenarios",
+    "SCHEMA", "Coalescer", "DesignCorners", "DesignGrid", "DesignPoint",
+    "ResultCache", "ShardPlan", "SweepHTTPServer", "SweepResult",
+    "SweepService", "SweepSpec", "SweepUnixServer", "SweepView",
+    "SymbolicSweepSpec", "design_corners", "design_grid", "design_name",
+    "enable_compilation_cache", "evaluate_spec", "group_label",
+    "iter_shards", "load_spec", "lower_designs", "merge_results",
+    "n_cells", "parse_design", "run", "run_sharded", "serve_stdio",
+    "spec_key", "spec_union", "split", "workload_scenarios",
 ]

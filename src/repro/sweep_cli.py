@@ -3,6 +3,8 @@
     python -m repro.sweep run spec.json --csv out.csv
     python -m repro.sweep show spec.json
     python -m repro.sweep serve < requests.jsonl
+    python -m repro.sweep serve --http 127.0.0.1:8731 \
+        --warmup-spec specs/isocap.json --stats-on-exit
 
 ``run`` lowers one JSON spec document (core/sweep.py, schema
 ``deepnvm.sweepspec/2``) through the registries and evaluates it — exactly
@@ -15,25 +17,33 @@ and streams partial results through the order-invariant merge — the path
 for mega-specs too large for one fold.  ``mega`` builds and runs the full
 DTCO cross product (``repro.scenarios.mega_spec``, 1e5+ cells) through
 that path.  ``show`` resolves without evaluating (spec linting).
-``serve`` is the long-lived mode: it answers JSONL sweep requests from
-stdin on stdout, one response line per request, with every memoized layer
-(scenario statistics, design tables, Algorithm-1 tunings, fold tables,
-sweep results) staying warm across requests — repeated or overlapping
-specs cost one evaluation.
 
-A serve request is either a bare spec document or an envelope::
+``serve`` is the long-lived mode, backed by the concurrent
+:class:`repro.sweep.service.SweepService` (see that module for the full
+story: transports, request coalescing, result cache, warmup).  With no
+transport flag it keeps the historical stdin JSONL contract — one request
+per line in, one response line out; ``--http HOST:PORT`` and/or
+``--unix PATH`` start threaded socket transports over the same handler
+(``--stdin`` adds the stdin loop alongside them).  ``--warmup`` /
+``--warmup-spec PATH`` / ``--compile-cache DIR`` pre-trace kernels before
+the first request; ``--window-ms`` / ``--max-batch`` / ``--no-coalesce``
+tune the coalescing window; ``--stats-on-exit`` prints the stats document
+to stderr on shutdown.  SIGTERM/SIGINT shut down gracefully: in-flight
+requests (including any in the coalescing window) are answered first.
+
+A serve request is either a bare spec document, an envelope, or an op::
 
     {"spec": {...}, "want": ["rows", "summary", "pareto", "plateaus"],
      "include_dram": false,
      "shard": {"scenario_chunk": 8, "design_chunk": 32,
                "devices": null, "by_width": true}}
+    {"op": "stats"}
 
 The response is one JSON object: ``{"ok": true, "name": ..., "axes":
-{...}, "cells": ..., "elapsed_ms": ..., <one key per requested view>}`` —
-``cells`` and ``elapsed_ms`` report per-request evaluated-cell count and
-wall-clock (the observability hook the sharded path and the concurrent
-service rely on) — or ``{"ok": false, "error": ...}`` on a bad request
-(the process keeps serving).
+{...}, "cells": ..., "elapsed_ms": ..., "source": "evaluated" |
+"coalesced" | "cache" | "sharded", <one key per requested view>}`` — or
+``{"ok": false, "error": ...}`` on a bad request (the process keeps
+serving).
 """
 
 from __future__ import annotations
@@ -41,14 +51,18 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+import threading
 import time
 from collections.abc import Mapping
 
 from repro.core import report
 from repro.core.sweep import ShardPlan, SymbolicSweepSpec, n_cells
-
-WANTS = ("rows", "summary", "pareto", "plateaus")
-SHARD_KEYS = ("scenario_chunk", "design_chunk", "devices", "by_width")
+from repro.sweep.service import (  # noqa: F401 — re-exported vocabulary
+    SHARD_KEYS,
+    WANTS,
+    SweepService,
+)
+from repro.sweep import service as service_mod
 
 
 def _load(path: str) -> SymbolicSweepSpec:
@@ -168,63 +182,91 @@ def cmd_show(args: argparse.Namespace) -> None:
               f"(group {p.group!r})")
 
 
+# The zero-window default service backing ``answer``/``serve`` for direct
+# library callers: same handler as the transports, but requests evaluate
+# immediately (no coalescing delay) — the historical single-caller contract.
+_default_service: SweepService | None = None
+_default_lock = threading.Lock()
+
+
+def _service() -> SweepService:
+    global _default_service
+    with _default_lock:
+        if _default_service is None or _default_service.closed:
+            _default_service = SweepService(window_ms=0.0)
+        return _default_service
+
+
 def answer(request: Mapping | str) -> dict:
     """One serve-mode request -> one response document."""
-    try:
-        req = json.loads(request) if isinstance(request, str) else request
-        envelope = isinstance(req, Mapping) and "spec" in req
-        doc = req["spec"] if envelope else req
-        want = tuple(req.get("want", ("summary",))) if envelope \
-            else ("summary",)
-        unknown = set(want) - set(WANTS)
-        if unknown:
-            raise ValueError(f"unknown want items {sorted(unknown)}; "
-                             f"available: {list(WANTS)}")
-        include_dram = bool(req.get("include_dram", False)) if envelope \
-            else False
-        plan = None
-        if envelope and req.get("shard") is not None:
-            shard = dict(req["shard"])
-            unknown = set(shard) - set(SHARD_KEYS)
-            if unknown:
-                raise ValueError(f"unknown shard keys {sorted(unknown)}; "
-                                 f"available: {list(SHARD_KEYS)}")
-            plan = ShardPlan(**shard)
-        sym = SymbolicSweepSpec.from_json(doc)
-        spec = sym.resolve()
-        t0 = time.perf_counter()
-        result = spec.run(plan)
-        resp: dict = {"ok": True, "name": sym.name,
-                      "axes": _axes(result.spec),
-                      "cells": n_cells(result.spec),
-                      "elapsed_ms": (time.perf_counter() - t0) * 1e3}
-        if "rows" in want:
-            resp["rows"] = result.rows(include_dram=include_dram)
-        if "summary" in want:
-            resp["summary"] = result.summary()
-        if "pareto" in want:
-            resp["pareto"] = result.pareto_front(include_dram=include_dram)
-        if "plateaus" in want:
-            resp["plateaus"] = result.capacity_plateaus()
-        return resp
-    except Exception as e:  # noqa: BLE001 — the server loop must survive
-        return {"ok": False, "error": f"{type(e).__name__}: {e}"}
+    return _service().handle(request)
 
 
 def serve(in_stream=None, out_stream=None) -> int:
     """Long-lived JSONL loop: one request per line in, one response line
     out.  Engine caches persist for the life of the process, so a warm
     server answers repeated specs without re-evaluating anything."""
-    in_stream = in_stream if in_stream is not None else sys.stdin
-    out_stream = out_stream if out_stream is not None else sys.stdout
-    served = 0
-    for line in in_stream:
-        if not line.strip():
-            continue
-        out_stream.write(json.dumps(answer(line)) + "\n")
-        out_stream.flush()
-        served += 1
-    return served
+    return service_mod.serve_stdio(_service(), in_stream, out_stream)
+
+
+def cmd_serve(args: argparse.Namespace) -> None:
+    import signal
+
+    stdio = args.stdin or not (args.http or args.unix)
+    # Zero coalescing window for a pure stdin loop (one synchronous caller,
+    # a window only adds latency); a small window once sockets are involved.
+    window_ms = args.window_ms if args.window_ms is not None \
+        else (0.0 if stdio and not (args.http or args.unix) else 5.0)
+    svc = SweepService(window_ms=window_ms, max_batch=args.max_batch,
+                      coalesce=not args.no_coalesce)
+    if args.warmup or args.warmup_spec or args.compile_cache:
+        info = svc.warmup(specs=tuple(args.warmup_spec or ()),
+                          compile_cache_dir=args.compile_cache,
+                          grid=args.warmup)
+        print(f"warmup: {info['fold_shapes']} fold shapes, "
+              f"{info.get('engine_tables', 0)} engine tables, "
+              f"{len(info['specs'])} specs in {info['warmup_s']:.2f}s",
+              file=sys.stderr)
+
+    servers = []
+    if args.http:
+        host, _, port = args.http.rpartition(":")
+        srv = service_mod.SweepHTTPServer(
+            (host or "127.0.0.1", int(port)), svc)
+        servers.append(srv)
+        bound = srv.server_address
+        print(f"listening on http://{bound[0]}:{bound[1]}",
+              file=sys.stderr, flush=True)
+    if args.unix:
+        if service_mod.SweepUnixServer is None:
+            raise SystemExit("unix sockets unsupported on this platform")
+        srv = service_mod.SweepUnixServer(args.unix, svc)
+        servers.append(srv)
+        print(f"listening on unix:{args.unix}", file=sys.stderr, flush=True)
+
+    def _terminate(signum, frame):  # noqa: ARG001 — signal signature
+        raise SystemExit(0)
+
+    signal.signal(signal.SIGTERM, _terminate)
+    signal.signal(signal.SIGINT, _terminate)
+    threads = [threading.Thread(target=srv.serve_forever, daemon=True)
+               for srv in servers]
+    for t in threads:
+        t.start()
+    try:
+        if stdio:
+            service_mod.serve_stdio(svc)
+        else:
+            threading.Event().wait()
+    except (KeyboardInterrupt, SystemExit):
+        pass
+    finally:
+        for srv in servers:
+            srv.shutdown()
+            srv.server_close()
+        svc.close()
+        if args.stats_on_exit:
+            print(json.dumps(svc.stats(), indent=2), file=sys.stderr)
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -266,8 +308,38 @@ def main(argv: list[str] | None = None) -> None:
     show_p.set_defaults(func=cmd_show)
 
     serve_p = sub.add_parser(
-        "serve", help="answer JSONL sweep requests from stdin (warm caches)")
-    serve_p.set_defaults(func=lambda args: serve())
+        "serve",
+        help="concurrent sweep service (stdin JSONL / HTTP / unix socket)")
+    serve_p.add_argument("--http", metavar="HOST:PORT",
+                         help="serve HTTP on this address (port 0 picks "
+                              "an ephemeral port, printed to stderr)")
+    serve_p.add_argument("--unix", metavar="PATH",
+                         help="serve JSONL over a unix stream socket")
+    serve_p.add_argument("--stdin", action="store_true",
+                         help="also run the stdin JSONL loop alongside "
+                              "socket transports (default when no "
+                              "transport flag is given)")
+    serve_p.add_argument("--window-ms", type=float, default=None,
+                         metavar="MS",
+                         help="coalescing window (default 5ms with a "
+                              "socket transport, 0 for stdin-only)")
+    serve_p.add_argument("--max-batch", type=int, default=64, metavar="N",
+                         help="max requests merged per coalesced batch")
+    serve_p.add_argument("--no-coalesce", action="store_true",
+                         help="disable request coalescing")
+    serve_p.add_argument("--warmup", action="store_true",
+                         help="pre-trace engine + fold kernels at the "
+                              "registered pad-width buckets before serving")
+    serve_p.add_argument("--warmup-spec", action="append", metavar="PATH",
+                         help="pre-trace the exact shapes this spec needs "
+                              "(repeatable)")
+    serve_p.add_argument("--compile-cache", metavar="DIR",
+                         help="enable the JAX persistent compilation "
+                              "cache at DIR (survives restarts)")
+    serve_p.add_argument("--stats-on-exit", action="store_true",
+                         help="print the stats document to stderr on "
+                              "shutdown")
+    serve_p.set_defaults(func=cmd_serve)
 
     args = ap.parse_args(argv)
     args.func(args)
