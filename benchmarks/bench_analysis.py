@@ -1,0 +1,80 @@
+"""Static-analysis benchmark: analyzer runtime and finding counts over
+``src/repro``, recorded in benchmarks/BENCH_analysis.json.
+
+Two things are worth tracking across PRs:
+
+  runtime   wall time of a full four-rule pass over the source tree.
+            The analyzer runs in the CI critical path (the
+            ``static-analysis`` job gates merges), so it has to stay
+            cheap — a few seconds, not a linter-framework minute.
+
+  counts    files analyzed and per-rule finding totals, split into
+            active / suppressed / baselined.  The strict gate already
+            enforces active == 0; the history row records how much
+            accepted debt (baseline + suppressions) that gate is
+            carrying, so growth is visible in BENCH_history.jsonl
+            rather than hidden in the baseline file.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.analysis import common, driver
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+JSON_PATH = "benchmarks/BENCH_analysis.json"
+REPS = 3
+
+
+def run(quick: bool = False) -> dict:
+    target = os.path.join(ROOT, "src", "repro")
+    baseline = common.load_baseline(os.path.join(
+        ROOT, common.BASELINE_DEFAULT))
+
+    reps = 1 if quick else REPS
+    times_s = []
+    result = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        result = driver.run_paths([target], baseline=baseline)
+        times_s.append(time.perf_counter() - t0)
+    best_s = min(times_s)
+
+    by_rule = {rule: 0 for rule in driver.CHECKS}
+    for f in result.findings:
+        by_rule[f.rule] = by_rule.get(f.rule, 0) + 1
+
+    row = {
+        "files": result.files,
+        "run_s": round(best_s, 3),
+        "us_per_file": round(best_s / max(result.files, 1) * 1e6, 1),
+        "active": len(result.active),
+        "suppressed": result.suppressed,
+        "baselined": result.baselined,
+        **{f"findings_{r.lower()}": n for r, n in sorted(by_rule.items())},
+    }
+    os.makedirs(os.path.dirname(JSON_PATH), exist_ok=True)
+    with open(JSON_PATH, "w") as f:
+        json.dump(row, f, indent=2)
+
+    return {
+        "rows": [row],
+        "bench": {
+            "files": row["files"],
+            "run_s": row["run_s"],
+            "us_per_file": row["us_per_file"],
+            "active_findings": row["active"],
+            "suppressed": row["suppressed"],
+            "baselined": row["baselined"],
+        },
+        "derived": (f"{row['files']} files in {row['run_s']:.2f}s, "
+                    f"active={row['active']}, "
+                    f"baselined={row['baselined']}"),
+    }
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=2))

@@ -50,6 +50,7 @@ MODULES = (
     "bench_sweep",
     "bench_shard",
     "bench_serve",
+    "bench_analysis",
 )
 
 

@@ -7,7 +7,7 @@
 3. fold a DL workload's memory behavior through the models (paper Fig. 4),
 4. ask the paper's question for one assigned LM arch on the TPU target.
 """
-from repro.core import bitcell, isocap, traffic, tuner
+from repro.core import bitcell, traffic, tuner
 from repro.core.workloads import alexnet
 
 # 1. circuit layer

@@ -1,0 +1,47 @@
+"""repro.analysis — repo-specific static analysis for the DeepNVM++ tree.
+
+Four AST passes encode the cross-layer invariants that previous PRs had
+to recover from after the fact:
+
+- **DNVM001 memo-key completeness** (`memo_keys`): a
+  ``functools.lru_cache``/``cache``-decorated function must not read
+  state that is outside its cache key — mutable module globals, closure
+  variables, mutable default arguments — and a wrapper that forwards
+  into a memoized callee must forward *every* parameter (the PR-4
+  node-blind ``design_table`` bug class).
+- **DNVM002 jit/retrace discipline** (`retrace`): inside ``jax.jit``
+  kernels — no closure captures of mutable module state (baked at trace
+  time), no Python branching on traced arguments that should be in
+  ``static_argnames``, and no dtype-narrowing ``float32`` constructions
+  in the ``enable_x64`` float64 modules (the PR-7 retrace/1-ulp hazard
+  class).
+- **DNVM003 unit consistency** (`units`): dimensional analysis over the
+  ``_s/_w/_j/_f/_m/_ohm/_bytes`` suffix conventions and the registered
+  ``tech``/``calibration``/``Periphery`` dataclass fields, propagated
+  through the PPA arithmetic — seconds + joules is an error, ``_f *
+  _ohm`` binding to an ``_s`` name is accepted.
+- **DNVM004 lock discipline** (`locks`): attributes of a lock-owning
+  class (or module) mutated outside a ``with self._lock/_cv`` block
+  (the PR-8 service-counter class).
+
+Findings print as ``file:line RULE message``.  Suppress a single site
+inline with ``# dnvm: ok(RULE, reason)`` on the offending line or the
+line above; accept legacy findings wholesale via the checked-in
+baseline (``analysis-baseline.txt``, keyed without line numbers so
+unrelated edits don't invalidate it).  CLI::
+
+    python -m repro.analysis [paths...] [--strict] [--baseline FILE]
+                             [--write-baseline] [--rules DNVM001,...]
+"""
+
+from __future__ import annotations
+
+from repro.analysis.common import (  # noqa: F401
+    BASELINE_DEFAULT,
+    Finding,
+    load_baseline,
+    write_baseline,
+)
+from repro.analysis.driver import run_paths  # noqa: F401
+
+RULES = ("DNVM001", "DNVM002", "DNVM003", "DNVM004")

@@ -1,0 +1,76 @@
+"""CLI: ``python -m repro.analysis [paths...] [--strict] [--baseline F]
+[--write-baseline] [--rules DNVM001,DNVM004]``.
+
+Exit status: 0 when no unbaselined findings (or not ``--strict``); 1
+when ``--strict`` and unbaselined findings remain; 2 on usage errors.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from repro.analysis import common, driver
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="DeepNVM++ repo-specific static analysis "
+                    "(DNVM001 memo keys, DNVM002 jit retrace, "
+                    "DNVM003 units, DNVM004 locks)")
+    ap.add_argument("paths", nargs="*", default=["src/repro"],
+                    help="files/directories to analyze "
+                         "(default: src/repro)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 if any unbaselined finding remains")
+    ap.add_argument("--baseline", default=common.BASELINE_DEFAULT,
+                    metavar="FILE",
+                    help="baseline file of accepted findings "
+                         f"(default: {common.BASELINE_DEFAULT})")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline file")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept all current findings into --baseline")
+    ap.add_argument("--rules", metavar="DNVM00X[,..]",
+                    help="comma-separated rule subset (default: all)")
+    args = ap.parse_args(argv)
+
+    rules = None
+    if args.rules:
+        rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+        unknown = sorted(set(rules) - set(driver.CHECKS))
+        if unknown:
+            ap.error(f"unknown rule(s): {', '.join(unknown)} "
+                     f"(choose from {', '.join(driver.CHECKS)})")
+
+    baseline = set() if args.no_baseline else \
+        common.load_baseline(args.baseline)
+    t0 = time.perf_counter()
+    result = driver.run_paths(args.paths or ["src/repro"], rules=rules,
+                              baseline=baseline)
+    dt_ms = (time.perf_counter() - t0) * 1e3
+
+    if args.write_baseline:
+        n = common.write_baseline(args.baseline, result.findings)
+        print(f"wrote {n} baseline entries to {args.baseline}")
+        return 0
+
+    for f in result.active:
+        print(f.render())
+    counts = ", ".join(f"{r}={n}" for r, n in sorted(
+        result.counts.items()) if n)
+    print(f"repro.analysis: {result.files} files, "
+          f"{len(result.active)} finding(s)"
+          f"{' (' + counts + ')' if counts else ''}, "
+          f"{result.suppressed} suppressed, "
+          f"{result.baselined} baselined, {dt_ms:.0f} ms",
+          file=sys.stderr)
+    if args.strict and result.active:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,357 @@
+"""Shared infrastructure for the repro.analysis passes.
+
+A pass is a function ``check(module: ModuleInfo) -> list[Finding]``.
+``ModuleInfo`` bundles the parsed AST (with parent links), the source
+lines (for suppression comments), and module-level facts every pass
+needs — most importantly which module-level names are *varying state*
+(reassigned or mutated after their first binding) as opposed to
+assign-once constants.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import tokenize
+from typing import Iterable, Iterator
+
+BASELINE_DEFAULT = "analysis-baseline.txt"
+
+# Method names whose call on a bare name counts as mutating it.
+_MUTATORS = frozenset({
+    "append", "extend", "insert", "add", "update", "setdefault", "pop",
+    "popitem", "remove", "discard", "clear", "appendleft",
+})
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One ``file:line RULE message`` diagnostic."""
+
+    path: str
+    line: int
+    rule: str
+    message: str
+    context: str = ""  # enclosing scope, for line-stable baseline keys
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line} {self.rule} {self.message}"
+
+    def baseline_key(self) -> str:
+        """Line-number-free identity: unrelated edits that shift lines
+        must not invalidate the checked-in baseline."""
+        return f"{self.path}\t{self.rule}\t{self.context}\t{self.message}"
+
+
+# ---------------------------------------------------------------------------
+# inline suppression markers (see module docstring for the syntax)
+
+
+def parse_suppressions(source: str, path: str) -> dict[int, set[str]]:
+    """Map line number -> rules suppressed on that line.
+
+    A marker suppresses its own line and the line below, so it can sit
+    either trailing the offending statement or on its own line above.
+    A missing/empty reason is itself an error (raised as ValueError so
+    the driver reports it as a finding on the marker line).
+    """
+    out: dict[int, set[str]] = {}
+    for lineno, comment in _comments(source):
+        marker = comment.split("dnvm:", 1)
+        if len(marker) != 2:
+            continue
+        body = marker[1].strip()
+        if not body.startswith("ok(") or not body.endswith(")"):
+            raise ValueError(
+                f"{path}:{lineno} malformed suppression {comment!r}; "
+                "expected '# dnvm: ok(RULE, reason)'")
+        inner = body[len("ok("):-1]
+        rule, _, reason = inner.partition(",")
+        rule, reason = rule.strip(), reason.strip()
+        if not rule.startswith("DNVM") or not reason:
+            raise ValueError(
+                f"{path}:{lineno} suppression needs a DNVM rule and a "
+                f"non-empty reason: {comment!r}")
+        for covered in (lineno, lineno + 1):
+            out.setdefault(covered, set()).add(rule)
+    return out
+
+
+def _comments(source: str) -> Iterator[tuple[int, str]]:
+    import io
+
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type == tokenize.COMMENT:
+                yield tok.start[0], tok.string
+    except tokenize.TokenError:  # pragma: no cover - ast parsed already
+        return
+
+
+# ---------------------------------------------------------------------------
+# baseline file
+
+
+def load_baseline(path: str) -> set[str]:
+    if not os.path.exists(path):
+        return set()
+    with open(path) as f:
+        return {line.rstrip("\n") for line in f
+                if line.strip() and not line.startswith("#")}
+
+
+def write_baseline(path: str, findings: Iterable[Finding]) -> int:
+    keys = sorted({f.baseline_key() for f in findings})
+    with open(path, "w") as f:
+        f.write("# repro.analysis baseline — accepted findings, one per "
+                "line (file<TAB>rule<TAB>scope<TAB>message).\n"
+                "# Regenerate: python -m repro.analysis --write-baseline "
+                "src/repro\n")
+        for k in keys:
+            f.write(k + "\n")
+    return len(keys)
+
+
+# ---------------------------------------------------------------------------
+# module model
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    path: str
+    source: str
+    tree: ast.Module
+    suppressions: dict[int, set[str]]
+    # module-level names that are reassigned or mutated after first
+    # binding anywhere in the module — reading these from a memoized or
+    # jitted body is key-blind / bakes trace-time state.
+    varying_globals: set[str]
+    # all module-level bindings (assignments, defs, imports)
+    module_names: set[str]
+
+    def scope_of(self, node: ast.AST) -> str:
+        """Dotted enclosing def/class chain, e.g. 'Coalescer._run_group'."""
+        parts = []
+        cur = getattr(node, "_dnvm_parent", None)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.ClassDef)):
+                parts.append(cur.name)
+            cur = getattr(cur, "_dnvm_parent", None)
+        return ".".join(reversed(parts)) or "<module>"
+
+
+def link_parents(tree: ast.AST) -> None:
+    for parent in ast.walk(tree):
+        for child in ast.iter_child_nodes(parent):
+            child._dnvm_parent = parent  # type: ignore[attr-defined]
+
+
+def load_module(path: str) -> ModuleInfo:
+    with open(path) as f:
+        source = f.read()
+    tree = ast.parse(source, filename=path)
+    link_parents(tree)
+    return ModuleInfo(
+        path=path,
+        source=source,
+        tree=tree,
+        suppressions=parse_suppressions(source, path),
+        varying_globals=_varying_globals(tree),
+        module_names=_module_names(tree),
+    )
+
+
+def _module_names(tree: ast.Module) -> set[str]:
+    names: set[str] = set()
+    for node in tree.body:
+        names |= _bound_names(node)
+    return names
+
+
+def _bound_names(node: ast.stmt) -> set[str]:
+    out: set[str] = set()
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+        out.add(node.name)
+    elif isinstance(node, (ast.Import, ast.ImportFrom)):
+        for a in node.names:
+            out.add((a.asname or a.name).split(".")[0])
+    elif isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+        targets = node.targets if isinstance(node, ast.Assign) else \
+            [node.target]
+        for t in targets:
+            for n in ast.walk(t):
+                if isinstance(n, ast.Name):
+                    out.add(n.id)
+    elif isinstance(node, (ast.If, ast.Try, ast.For, ast.While, ast.With)):
+        for sub in ast.iter_child_nodes(node):
+            if isinstance(sub, ast.stmt):
+                out |= _bound_names(sub)
+    return out
+
+
+def _varying_globals(tree: ast.Module) -> set[str]:
+    """Module-level names that are *not* assign-once constants.
+
+    A name varies if it is (a) bound more than once at module level,
+    (b) declared ``global`` and assigned inside any function, or
+    (c) mutated in place anywhere — subscript/attribute store, augmented
+    assignment, or a mutating method call (``x.append(...)``) on the
+    bare name.  Dicts/tables assigned once and only ever read (the
+    ``_ANCHORS``/``TABLE2`` registries) are constants, not findings.
+    """
+    bind_counts: dict[str, int] = {}
+    varying: set[str] = set()
+
+    for node in tree.body:
+        for name in _bound_names(node):
+            bind_counts[name] = bind_counts.get(name, 0) + 1
+    # a module-level for loop rebinds its target every iteration but is
+    # still "assign once" from the reader's perspective; keep simple:
+    varying |= {n for n, c in bind_counts.items() if c > 1}
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Global):
+            fn = node
+            while fn is not None and not isinstance(
+                    fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                fn = getattr(fn, "_dnvm_parent", None)
+            if fn is not None:
+                varying |= set(node.names)
+        elif isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) else \
+                [node.target]
+            for t in targets:
+                base = _store_base(t)
+                if base is not None:
+                    varying.add(base)
+        elif isinstance(node, ast.Call):
+            f = node.func
+            if (isinstance(f, ast.Attribute) and f.attr in _MUTATORS
+                    and isinstance(f.value, ast.Name)):
+                varying.add(f.value.id)
+        elif isinstance(node, ast.Delete):
+            for t in node.targets:
+                base = _store_base(t)
+                if base is not None:
+                    varying.add(base)
+    return varying
+
+
+def _store_base(target: ast.expr) -> str | None:
+    """``x[k] = ...`` / ``x.attr = ...`` mutate the object bound to
+    ``x``; a plain ``x = ...`` store does not count here (handled by the
+    module-level bind count)."""
+    if isinstance(target, (ast.Subscript, ast.Attribute)):
+        inner = target.value
+        while isinstance(inner, (ast.Subscript, ast.Attribute)):
+            inner = inner.value
+        if isinstance(inner, ast.Name):
+            return inner.id
+    if isinstance(target, (ast.Tuple, ast.List)):
+        for elt in target.elts:
+            base = _store_base(elt)
+            if base is not None:
+                return base
+    return None
+
+
+# ---------------------------------------------------------------------------
+# small AST helpers shared by the passes
+
+
+def dotted(node: ast.expr) -> str | None:
+    """'functools.lru_cache' for an Attribute/Name chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def decorator_name(dec: ast.expr) -> str | None:
+    """Dotted name of a decorator, unwrapping a call: ``@lru_cache(...)``
+    and ``@functools.partial(jax.jit, ...)`` -> 'lru_cache' /
+    'functools.partial'."""
+    if isinstance(dec, ast.Call):
+        dec = dec.func
+    return dotted(dec)
+
+
+def func_params(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> list[str]:
+    a = fn.args
+    names = [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def local_bindings(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> set[str]:
+    """Names bound inside ``fn`` (params, assignments, imports, nested
+    defs, comprehension targets, with/except/for targets)."""
+    bound = set(func_params(fn))
+    for node in ast.walk(fn):
+        if node is fn:
+            continue
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            bound.add(node.name)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for al in node.names:
+                bound.add((al.asname or al.name).split(".")[0])
+        elif isinstance(node, ast.Name) and isinstance(
+                node.ctx, (ast.Store, ast.Del)):
+            bound.add(node.id)
+        elif isinstance(node, ast.ExceptHandler) and node.name:
+            bound.add(node.name)
+        elif isinstance(node, ast.arg):
+            bound.add(node.arg)
+    return bound
+
+
+def loads_in(fn: ast.FunctionDef | ast.AsyncFunctionDef,
+             skip_nested_defs: bool = False) -> Iterator[ast.Name]:
+    """All Name loads in ``fn``'s body (optionally skipping nested
+    function bodies)."""
+    def visit(node: ast.AST) -> Iterator[ast.Name]:
+        for child in ast.iter_child_nodes(node):
+            if skip_nested_defs and isinstance(
+                    child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.Lambda)):
+                continue
+            if isinstance(child, ast.Name) and isinstance(child.ctx,
+                                                          ast.Load):
+                yield child
+            yield from visit(child)
+    yield from visit(fn)
+
+
+def iter_functions(tree: ast.Module) -> Iterator[
+        ast.FunctionDef | ast.AsyncFunctionDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def walk_python_files(paths: list[str]) -> list[str]:
+    """Expand files/directories into a sorted list of .py files."""
+    out: list[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+        elif os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in {"__pycache__", ".git"})
+                out.extend(os.path.join(root, f) for f in sorted(files)
+                           if f.endswith(".py"))
+        else:
+            raise FileNotFoundError(p)
+    # normalise to repo-relative-ish forward-slash paths for stable keys
+    return sorted({os.path.normpath(p).replace(os.sep, "/") for p in out})

@@ -1,0 +1,66 @@
+"""Pass orchestration: parse once, run every rule, apply suppressions
+and the baseline, and report."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.analysis import locks, memo_keys, retrace, units
+from repro.analysis.common import Finding, load_module, walk_python_files
+
+CHECKS = {
+    "DNVM001": memo_keys.check,
+    "DNVM002": retrace.check,
+    "DNVM003": units.check,
+    "DNVM004": locks.check,
+}
+
+
+@dataclasses.dataclass
+class RunResult:
+    findings: list[Finding]          # everything a rule raised
+    active: list[Finding]            # minus suppressions and baseline
+    suppressed: int
+    baselined: int
+    files: int
+
+    @property
+    def counts(self) -> dict[str, int]:
+        out = {rule: 0 for rule in CHECKS}
+        for f in self.active:
+            out[f.rule] = out.get(f.rule, 0) + 1
+        return out
+
+
+def run_paths(paths: list[str], rules: list[str] | None = None,
+              baseline: set[str] | None = None) -> RunResult:
+    selected = {r: CHECKS[r] for r in (rules or CHECKS)}
+    files = walk_python_files(paths)
+    findings: list[Finding] = []
+    suppressed = 0
+    for path in files:
+        try:
+            mod = load_module(path)
+        except (SyntaxError, ValueError) as e:
+            findings.append(Finding(path, _lineno_of(e), "DNVM000",
+                                    str(e), "<parse>"))
+            continue
+        for rule, fn in selected.items():
+            for f in fn(mod):
+                if rule in mod.suppressions.get(f.line, set()):
+                    suppressed += 1
+                else:
+                    findings.append(f)
+    findings.sort()
+    baseline = baseline or set()
+    active = [f for f in findings if f.baseline_key() not in baseline]
+    return RunResult(findings=findings, active=active,
+                     suppressed=suppressed,
+                     baselined=len(findings) - len(active),
+                     files=len(files))
+
+
+def _lineno_of(e: Exception) -> int:
+    if isinstance(e, SyntaxError) and e.lineno:
+        return e.lineno
+    return 1

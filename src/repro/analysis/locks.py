@@ -1,0 +1,206 @@
+"""DNVM004 — lock discipline in the concurrent service layer.
+
+A class that creates a ``threading.Lock``/``RLock``/``Condition`` in
+``__init__`` owns shared mutable state; every mutation of its instance
+attributes outside ``__init__`` must happen under ``with self._lock:``
+(any of the class's own locks counts — this pass checks *guardedness*,
+not lock-to-field assignment).  The same applies at module scope: a
+module-level lock means module globals assigned inside functions must
+hold it.
+
+This is the PR-8 bug class: the sweep service's coalescer/stat counters
+are read concurrently by ``stats()`` transports while the worker thread
+increments them — an unlocked ``self.batches += 1`` is a data race that
+no test reliably catches.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.common import Finding, ModuleInfo, dotted
+
+RULE = "DNVM004"
+
+_LOCK_FACTORIES = frozenset({
+    "threading.Lock", "threading.RLock", "threading.Condition",
+    "Lock", "RLock", "Condition",
+})
+
+
+def check(mod: ModuleInfo) -> list[Finding]:
+    findings: list[Finding] = []
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.ClassDef):
+            findings += _check_class(mod, node)
+    findings += _check_module_globals(mod)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# class-attribute discipline
+
+
+def _check_class(mod: ModuleInfo, cls: ast.ClassDef) -> list[Finding]:
+    lock_attrs = _owned_locks(cls)
+    if not lock_attrs:
+        return []
+    out: list[Finding] = []
+    for item in cls.body:
+        if not isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if item.name == "__init__":
+            continue
+        self_name = _self_param(item)
+        if self_name is None:
+            continue
+        for target, stmt in _self_mutations(item, self_name):
+            if target.attr in lock_attrs:
+                continue
+            if _under_owned_lock(stmt, self_name, lock_attrs):
+                continue
+            out.append(Finding(
+                mod.path, stmt.lineno, RULE,
+                f"'{cls.name}.{item.name}' mutates "
+                f"'self.{target.attr}' outside "
+                f"'with self.{sorted(lock_attrs)[0]}' — "
+                f"{cls.name} owns lock(s) {sorted(lock_attrs)}",
+                mod.scope_of(stmt)))
+    return out
+
+
+def _owned_locks(cls: ast.ClassDef) -> set[str]:
+    """Attributes assigned a Lock/RLock/Condition anywhere in the class
+    (normally ``__init__``)."""
+    locks: set[str] = set()
+    for node in ast.walk(cls):
+        if not isinstance(node, ast.Assign):
+            continue
+        if not (isinstance(node.value, ast.Call)
+                and dotted(node.value.func) in _LOCK_FACTORIES):
+            continue
+        for t in node.targets:
+            if (isinstance(t, ast.Attribute)
+                    and isinstance(t.value, ast.Name)):
+                locks.add(t.attr)
+    return locks
+
+
+def _self_param(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> str | None:
+    args = fn.args.posonlyargs + fn.args.args
+    return args[0].arg if args else None
+
+
+def _self_mutations(fn: ast.FunctionDef | ast.AsyncFunctionDef,
+                    self_name: str):
+    """(attribute-target, owning-statement) pairs for every ``self.x``
+    store — plain/augmented assignment, ``del``, and in-place container
+    mutation (``self.x[k] = ...``, ``del self.x[k]``)."""
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                attr = _self_attr(t, self_name)
+                if attr is not None:
+                    yield attr, node
+        elif isinstance(node, ast.Delete):
+            for t in node.targets:
+                attr = _self_attr(t, self_name)
+                if attr is not None:
+                    yield attr, node
+
+
+def _self_attr(target: ast.expr, self_name: str) -> ast.Attribute | None:
+    """The ``self.x`` attribute mutated by this store target, unwrapping
+    subscripts (``self.x[k] = v`` mutates ``self.x``) and tuples."""
+    if isinstance(target, (ast.Tuple, ast.List)):
+        for elt in target.elts:
+            found = _self_attr(elt, self_name)
+            if found is not None:
+                return found
+        return None
+    while isinstance(target, ast.Subscript):
+        target = target.value
+    if (isinstance(target, ast.Attribute)
+            and isinstance(target.value, ast.Name)
+            and target.value.id == self_name):
+        return target
+    return None
+
+
+def _under_owned_lock(node: ast.AST, self_name: str,
+                      lock_attrs: set[str]) -> bool:
+    cur = getattr(node, "_dnvm_parent", None)
+    while cur is not None:
+        if isinstance(cur, (ast.With, ast.AsyncWith)):
+            for item in cur.items:
+                expr = item.context_expr
+                # unwrap condition helpers: self._cv, self._lock
+                if (isinstance(expr, ast.Attribute)
+                        and isinstance(expr.value, ast.Name)
+                        and expr.value.id == self_name
+                        and expr.attr in lock_attrs):
+                    return True
+        cur = getattr(cur, "_dnvm_parent", None)
+    return False
+
+
+# ---------------------------------------------------------------------------
+# module-global discipline
+
+
+def _check_module_globals(mod: ModuleInfo) -> list[Finding]:
+    module_locks = _module_locks(mod.tree)
+    if not module_locks:
+        return []
+    out: list[Finding] = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Global):
+            continue
+        fn = getattr(node, "_dnvm_parent", None)
+        while fn is not None and not isinstance(
+                fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            fn = getattr(fn, "_dnvm_parent", None)
+        if fn is None:
+            continue
+        declared = set(node.names)
+        for sub in ast.walk(fn):
+            if not isinstance(sub, (ast.Assign, ast.AugAssign)):
+                continue
+            targets = sub.targets if isinstance(sub, ast.Assign) \
+                else [sub.target]
+            names = {t.id for t in targets if isinstance(t, ast.Name)}
+            hit = names & declared
+            if hit and not _under_module_lock(sub, module_locks):
+                out.append(Finding(
+                    mod.path, sub.lineno, RULE,
+                    f"global '{sorted(hit)[0]}' assigned outside "
+                    f"'with {sorted(module_locks)[0]}' — module owns "
+                    f"lock(s) {sorted(module_locks)}",
+                    mod.scope_of(sub)))
+    return out
+
+
+def _module_locks(tree: ast.Module) -> set[str]:
+    locks: set[str] = set()
+    for node in tree.body:
+        if (isinstance(node, ast.Assign)
+                and isinstance(node.value, ast.Call)
+                and dotted(node.value.func) in _LOCK_FACTORIES):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    locks.add(t.id)
+    return locks
+
+
+def _under_module_lock(node: ast.AST, locks: set[str]) -> bool:
+    cur = getattr(node, "_dnvm_parent", None)
+    while cur is not None:
+        if isinstance(cur, (ast.With, ast.AsyncWith)):
+            for item in cur.items:
+                if (isinstance(item.context_expr, ast.Name)
+                        and item.context_expr.id in locks):
+                    return True
+        cur = getattr(cur, "_dnvm_parent", None)
+    return False

@@ -1,0 +1,166 @@
+"""DNVM001 — memo-key completeness.
+
+A ``functools.lru_cache``/``cache``-decorated function's cache key is
+exactly its argument tuple.  Anything else its body reads — mutable
+module globals, closure variables, mutable defaults — is invisible to
+the key, so a change in that state silently serves stale results.  The
+canonical incident is PR 4's node-blind ``design_table``: a thin public
+wrapper gained a ``node`` parameter but kept forwarding into the
+memoized worker without it, so every node returned the 16 nm tables.
+
+Checks:
+
+- **varying-global read**: the body loads a module-level name that is
+  reassigned or mutated somewhere in the module (assign-once registry
+  dicts and imported modules are constants and stay silent);
+- **closure read**: the body loads a name bound in an enclosing
+  function — per-call state baked into a cross-call cache;
+- **mutable default**: a list/dict/set (display or constructor call)
+  default argument survives across calls outside the key;
+- **key-blind wrapper**: a function that calls a memoized sibling but
+  never reads one of its own parameters — the parameter cannot have
+  reached the cache key.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.common import (
+    Finding,
+    ModuleInfo,
+    decorator_name,
+    func_params,
+    iter_functions,
+    loads_in,
+    local_bindings,
+)
+
+RULE = "DNVM001"
+
+_MEMO_DECORATORS = frozenset({
+    "functools.cache", "functools.lru_cache", "cache", "lru_cache",
+})
+_PROPERTY_MEMO_DECORATORS = frozenset({
+    "functools.cached_property", "cached_property",
+})
+_MUTABLE_DEFAULT_CALLS = frozenset({"list", "dict", "set", "defaultdict",
+                                    "collections.defaultdict"})
+
+
+def memo_kind(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> str | None:
+    for dec in fn.decorator_list:
+        name = decorator_name(dec)
+        if name in _MEMO_DECORATORS:
+            return "cache"
+        if name in _PROPERTY_MEMO_DECORATORS:
+            return "cached_property"
+    return None
+
+
+def check(mod: ModuleInfo) -> list[Finding]:
+    findings: list[Finding] = []
+    memoized: dict[str, ast.FunctionDef | ast.AsyncFunctionDef] = {}
+    for fn in iter_functions(mod.tree):
+        kind = memo_kind(fn)
+        if kind is None:
+            continue
+        if kind == "cache":
+            memoized[fn.name] = fn
+        findings += _check_body_reads(mod, fn)
+        if kind == "cache":
+            findings += _check_defaults(mod, fn)
+    for fn in iter_functions(mod.tree):
+        if fn.name not in memoized:
+            findings += _check_wrapper(mod, fn, memoized)
+    return findings
+
+
+def _check_body_reads(mod: ModuleInfo,
+                      fn: ast.FunctionDef | ast.AsyncFunctionDef,
+                      ) -> list[Finding]:
+    out = []
+    local = local_bindings(fn)
+    enclosing = _enclosing_locals(fn)
+    seen: set[str] = set()
+    for name in loads_in(fn):
+        if name.id in local or name.id in seen:
+            continue
+        if name.id in enclosing:
+            seen.add(name.id)
+            out.append(Finding(
+                mod.path, name.lineno, RULE,
+                f"memoized '{fn.name}' reads closure variable "
+                f"'{name.id}' — per-call state outside the cache key",
+                mod.scope_of(name)))
+        elif name.id in mod.varying_globals:
+            seen.add(name.id)
+            out.append(Finding(
+                mod.path, name.lineno, RULE,
+                f"memoized '{fn.name}' reads mutable module state "
+                f"'{name.id}' — not part of the cache key",
+                mod.scope_of(name)))
+    return out
+
+
+def _check_defaults(mod: ModuleInfo,
+                    fn: ast.FunctionDef | ast.AsyncFunctionDef,
+                    ) -> list[Finding]:
+    out = []
+    a = fn.args
+    pairs = list(zip([p.arg for p in (*a.posonlyargs, *a.args)][
+        len(a.posonlyargs) + len(a.args) - len(a.defaults):], a.defaults))
+    pairs += [(p.arg, d) for p, d in zip(a.kwonlyargs, a.kw_defaults)
+              if d is not None]
+    for pname, default in pairs:
+        bad = isinstance(default, (ast.List, ast.Dict, ast.Set)) or (
+            isinstance(default, ast.Call)
+            and _callname(default) in _MUTABLE_DEFAULT_CALLS)
+        if bad:
+            out.append(Finding(
+                mod.path, default.lineno, RULE,
+                f"memoized '{fn.name}' has mutable default for "
+                f"'{pname}' — shared across calls outside the cache key",
+                mod.scope_of(default)))
+    return out
+
+
+def _check_wrapper(mod: ModuleInfo,
+                   fn: ast.FunctionDef | ast.AsyncFunctionDef,
+                   memoized: dict[str, ast.FunctionDef],
+                   ) -> list[Finding]:
+    """A wrapper forwarding into a memoized sibling must read every one
+    of its parameters — an unread parameter cannot be in the key."""
+    callees = {n.func.id for n in ast.walk(fn)
+               if isinstance(n, ast.Call) and isinstance(n.func, ast.Name)
+               and n.func.id in memoized}
+    if not callees:
+        return []
+    read = {n.id for n in loads_in(fn)}
+    out = []
+    for pname in func_params(fn):
+        if pname.startswith("_") or pname in ("self", "cls"):
+            continue
+        if pname not in read:
+            out.append(Finding(
+                mod.path, fn.lineno, RULE,
+                f"'{fn.name}' parameter '{pname}' is never read but it "
+                f"calls memoized {sorted(callees)} — key-blind wrapper "
+                "(the PR-4 design_table bug class)",
+                mod.scope_of(fn.body[0]) if fn.body else fn.name))
+    return out
+
+
+def _enclosing_locals(fn: ast.AST) -> set[str]:
+    names: set[str] = set()
+    cur = getattr(fn, "_dnvm_parent", None)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            names |= local_bindings(cur)
+        cur = getattr(cur, "_dnvm_parent", None)
+    return names
+
+
+def _callname(call: ast.Call) -> str | None:
+    from repro.analysis.common import dotted
+    return dotted(call.func)

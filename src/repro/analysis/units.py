@@ -1,0 +1,447 @@
+"""DNVM003 — unit consistency of the PPA arithmetic.
+
+The repo's quantity-bearing names carry their unit as a trailing
+suffix (``read_latency_s``, ``sense_energy_j``, ``c_bitline_per_row_f``,
+``htree_ns_per_mm``); a handful of registered names (``vdd``, ``rows``,
+``peri_area_lin``…) carry dimensions the suffix grammar can't express.
+This pass propagates dimensions — exponent vectors over (m, kg, s, A),
+*scale-free* so ``ns`` and ``s`` are both time — through the PPA
+expressions and flags:
+
+- adding/subtracting/ordering two quantities of different dimensions
+  (seconds + joules is the canonical error);
+- binding a known dimension to a name whose suffix declares a
+  different one (``_f * _ohm`` assigned to an ``_s`` name is *checked
+  and accepted*: F·Ω = s);
+- passing a known dimension to a keyword argument or returning it from
+  a function whose name declares a different one.
+
+Numeric literals are polymorphic coefficients (``* 1e-9`` scale factors
+never conflict); unparseable names are unknowns that absorb silently —
+so the pass only speaks when both sides of an operation are genuinely
+known, which keeps it quiet outside the unit-disciplined core.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.common import Finding, ModuleInfo, dotted, func_params
+
+RULE = "DNVM003"
+
+# Dimension: exponent 4-vector over (m, kg, s, A), or one of the
+# sentinels below.  Scale-free: ns == s, um2 == m2.
+Dim = tuple[float, float, float, float]
+UNKNOWN = None          # no information — absorbs every operation
+ANY = "any"             # numeric literal — unifies with anything
+
+ONE: Dim = (0.0, 0.0, 0.0, 0.0)
+L: Dim = (1, 0, 0, 0)
+M: Dim = (0, 1, 0, 0)
+T: Dim = (0, 0, 1, 0)
+I: Dim = (0, 0, 0, 1)  # noqa: E741 - SI symbol for current
+AREA: Dim = (2, 0, 0, 0)
+VOLT: Dim = (2, 1, -3, -1)
+WATT: Dim = (2, 1, -3, 0)
+JOULE: Dim = (2, 1, -2, 0)
+FARAD: Dim = (-2, -1, 4, 2)
+OHM: Dim = (2, 1, -3, -2)
+HERTZ: Dim = (0, 0, -1, 0)
+
+_NAMED = {
+    ONE: "1", L: "m", AREA: "m^2", T: "s", M: "kg", I: "A", VOLT: "V",
+    WATT: "W", JOULE: "J", FARAD: "F", OHM: "ohm", HERTZ: "1/s",
+    (1, 1, -3, 0): "W/m", (-1, 1, -2, 0): "J/m", (-1, 0, 1, 0): "s/m",
+    (0, 0, 1, 1): "C",
+}
+
+# Suffix tokens — trailing ``_``-separated unit tokens of a name.
+# Grammar: UNIT+ ("per" UNIT+)* anchored at the end of the name; a run
+# that would *start* with "per" (``energy_per_byte``) leaves the
+# numerator quantity unparsed and falls back to the registry.
+_TOKENS: dict[str, Dim] = {}
+for _t in ("s", "ns", "ps", "us", "ms"):
+    _TOKENS[_t] = T
+for _t in ("w", "mw", "uw", "nw", "pw"):
+    _TOKENS[_t] = WATT
+for _t in ("j", "pj", "nj", "fj", "aj", "uj", "mj"):
+    _TOKENS[_t] = JOULE
+for _t in ("f", "ff", "pf", "af"):
+    _TOKENS[_t] = FARAD
+for _t in ("ohm", "kohm", "mohm"):
+    _TOKENS[_t] = OHM
+for _t in ("a", "ma", "ua", "na", "pa"):
+    _TOKENS[_t] = I
+for _t in ("v", "mv", "uv"):
+    _TOKENS[_t] = VOLT
+for _t in ("m", "mm", "um", "nm", "cm"):
+    _TOKENS[_t] = L
+for _t in ("m2", "mm2", "um2", "nm2", "area"):
+    _TOKENS[_t] = AREA
+for _t in ("hz", "khz", "mhz", "ghz"):
+    _TOKENS[_t] = HERTZ
+# information/count tokens are dimensionless: scale-free analysis can't
+# distinguish bits from bytes from counts anyway, and the PPA code
+# freely multiplies per-bit energies by bit counts.
+for _t in ("bit", "bits", "byte", "bytes", "kb", "mb", "gb", "tb",
+           "fin", "fins", "norm", "frac", "ratio", "rel", "pct"):
+    _TOKENS[_t] = ONE
+
+# Exact-name registry (leading underscores stripped, lowercased): the
+# tech/calibration/Platform/org fields whose dimension the suffix
+# grammar cannot express.
+REGISTRY: dict[str, Dim] = {
+    # electrical
+    "vdd": VOLT,
+    "ion_per_fin_a": I, "ioff_per_fin_a": I, "i_read_per_fin": I,
+    # calibration fits (scale-free: "per sqrt(MB)" is dimensionless)
+    "peri_area_lin": AREA, "peri_area_sqrt": AREA,
+    "leak_lin": WATT, "leak_sqrt": WATT,
+    "k_read_lat": ONE, "k_write_lat": ONE, "k_read_e": ONE,
+    "k_write_e": ONE,
+    # platform
+    "peak_flops": HERTZ, "dram_bw": HERTZ,  # byte/s, info dimensionless
+    "dram_energy_per_byte": JOULE, "mem_serialization": ONE,
+    "llc_assoc": ONE,
+    # organization / counts
+    "rows": ONE, "cols": ONE, "banks": ONE, "assoc": ONE, "ways": ONE,
+    "ways_sensed": ONE, "fins_read": ONE, "fins_write": ONE,
+    "total_fins": ONE, "flips": ONE, "n_sub": ONE, "batch": ONE,
+    "reuse_distance": ONE,
+}
+
+
+def render(dim: Dim) -> str:
+    if dim in _NAMED:
+        return _NAMED[dim]
+    parts = []
+    for sym, e in zip(("m", "kg", "s", "A"), dim):
+        if e:
+            parts.append(sym if e == 1 else
+                         f"{sym}^{e:g}")
+    return "*".join(parts) or "1"
+
+
+def suffix_dim(name: str) -> Dim | None:
+    """Dimension declared by a name's trailing unit-token run, or None."""
+    tokens = [t for t in name.lower().lstrip("_").split("_") if t]
+    run: list[str] = []
+    for tok in reversed(tokens):
+        if tok in _TOKENS or tok == "per":
+            run.append(tok)
+        else:
+            break
+    run.reverse()
+    if not run or run[0] == "per" or run[-1] == "per":
+        return None
+    if len(run) == len(tokens):
+        # no quantity stem: bare locals like ``s``/``f``/``bits`` are
+        # loop/scale variables, not suffixed quantities
+        return None
+    groups: list[list[Dim]] = [[]]
+    for tok in run:
+        if tok == "per":
+            groups.append([])
+        else:
+            groups[-1].append(_TOKENS[tok])
+    # numerator: the *last* token wins — earlier numerator tokens are
+    # quantity descriptors ("area_mm2" is an area in mm^2, not
+    # area*mm^2); denominator groups multiply ("per_mm_bit").
+    dim = groups[0][-1]
+    for grp in groups[1:]:
+        for d in grp:
+            dim = _div(dim, d)
+    return dim
+
+
+def declared_dim(name: str) -> Dim | None:
+    key = name.lower().lstrip("_")
+    if key in REGISTRY:
+        return REGISTRY[key]
+    return suffix_dim(name)
+
+
+def _mul(a: Dim, b: Dim) -> Dim:
+    return tuple(x + y for x, y in zip(a, b))  # type: ignore[return-value]
+
+
+def _div(a: Dim, b: Dim) -> Dim:
+    return tuple(x - y for x, y in zip(a, b))  # type: ignore[return-value]
+
+
+def _pow(a: Dim, n: float) -> Dim:
+    return tuple(x * n for x in a)  # type: ignore[return-value]
+
+
+# ---------------------------------------------------------------------------
+# expression evaluation
+
+
+_SQRT_FNS = frozenset({"sqrt", "math.sqrt", "np.sqrt", "jnp.sqrt",
+                       "numpy.sqrt", "jax.numpy.sqrt"})
+_DIMLESS_FNS = frozenset({
+    "log", "log2", "log10", "exp", "tanh", "math.log", "math.log2",
+    "math.log10", "math.exp", "math.tanh", "np.log", "np.log2", "np.exp",
+    "jnp.log", "jnp.log2", "jnp.exp", "len", "math.isfinite", "bool",
+})
+_PASSTHROUGH_FNS = frozenset({
+    "float", "int", "abs", "round", "sum", "math.ceil", "math.floor",
+    "math.fabs", "np.ceil", "np.floor", "np.abs", "np.sum", "np.mean",
+    "jnp.ceil", "jnp.floor", "jnp.abs", "jnp.sum", "jnp.mean",
+    "np.asarray", "jnp.asarray", "np.array", "jnp.array",
+})
+_MERGE_FNS = frozenset({
+    "min", "max", "np.minimum", "np.maximum", "jnp.minimum",
+    "jnp.maximum",
+})
+
+
+class _UnitChecker:
+    def __init__(self, mod: ModuleInfo):
+        self.mod = mod
+        self.findings: list[Finding] = []
+
+    # -- entry ---------------------------------------------------------------
+
+    def check_function(self, fn: ast.FunctionDef | ast.AsyncFunctionDef
+                       ) -> None:
+        env: dict[str, object] = {}
+        for p in func_params(fn):
+            d = declared_dim(p)
+            if d is not None:
+                env[p] = d
+        self._stmts(fn.body, env, fn)
+
+    # -- statements ----------------------------------------------------------
+
+    def _stmts(self, body: list[ast.stmt], env: dict, fn) -> None:
+        for stmt in body:
+            self._stmt(stmt, env, fn)
+
+    def _stmt(self, stmt: ast.stmt, env: dict, fn) -> None:
+        if isinstance(stmt, ast.Assign):
+            dim = self.dim_of(stmt.value, env)
+            for t in stmt.targets:
+                self._bind(t, dim, env)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            dim = self.dim_of(stmt.value, env)
+            self._bind(stmt.target, dim, env)
+        elif isinstance(stmt, ast.AugAssign):
+            cur = self._load_target(stmt.target, env)
+            inc = self.dim_of(stmt.value, env)
+            merged = self._merge(cur, inc, stmt, "augmented assignment")
+            self._bind(stmt.target, merged, env, check=False)
+        elif isinstance(stmt, ast.Return) and stmt.value is not None:
+            dim = self.dim_of(stmt.value, env)
+            declared = suffix_dim(fn.name)
+            if (declared is not None and isinstance(dim, tuple)
+                    and dim != declared):
+                self._flag(stmt, f"returns {render(dim)} from "
+                           f"'{fn.name}' which declares "
+                           f"{render(declared)}")
+        elif isinstance(stmt, ast.Expr):
+            self.dim_of(stmt.value, env)
+        elif isinstance(stmt, (ast.If,)):
+            self.dim_of(stmt.test, env)
+            self._stmts(stmt.body, env, fn)
+            self._stmts(stmt.orelse, env, fn)
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._bind(stmt.target, UNKNOWN, env, check=False)
+            self._stmts(stmt.body, env, fn)
+            self._stmts(stmt.orelse, env, fn)
+        elif isinstance(stmt, ast.While):
+            self.dim_of(stmt.test, env)
+            self._stmts(stmt.body, env, fn)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            self._stmts(stmt.body, env, fn)
+        elif isinstance(stmt, ast.Try):
+            self._stmts(stmt.body, env, fn)
+            for h in stmt.handlers:
+                self._stmts(h.body, env, fn)
+            self._stmts(stmt.orelse, env, fn)
+            self._stmts(stmt.finalbody, env, fn)
+        # nested defs/classes: handled as their own functions by check()
+
+    def _bind(self, target: ast.expr, dim, env: dict,
+              check: bool = True) -> None:
+        if isinstance(target, ast.Name):
+            name = target.id
+        elif isinstance(target, ast.Attribute):
+            name = target.attr
+        else:
+            for elt in getattr(target, "elts", ()):
+                self._bind(elt, UNKNOWN, env, check=False)
+            return
+        declared = declared_dim(name)
+        if (check and declared is not None and isinstance(dim, tuple)
+                and dim != declared):
+            self._flag(target, f"binds {render(dim)} to '{name}' which "
+                       f"declares {render(declared)}")
+        if isinstance(target, ast.Name):
+            if isinstance(dim, tuple):
+                env[name] = dim
+            elif declared is not None:
+                env[name] = declared  # trust the suffix when value unknown
+            else:
+                env[name] = dim
+
+    def _load_target(self, target: ast.expr, env: dict):
+        if isinstance(target, ast.Name):
+            return env.get(target.id, declared_dim(target.id) or UNKNOWN)
+        if isinstance(target, ast.Attribute):
+            return declared_dim(target.attr) or UNKNOWN
+        return UNKNOWN
+
+    # -- expressions ---------------------------------------------------------
+
+    def dim_of(self, node: ast.expr, env: dict):
+        if isinstance(node, ast.Constant):
+            return ANY if isinstance(node.value, (int, float, complex)) \
+                else UNKNOWN
+        if isinstance(node, ast.Name):
+            if node.id in env:
+                return env[node.id]
+            d = declared_dim(node.id)
+            return d if d is not None else UNKNOWN
+        if isinstance(node, ast.Attribute):
+            d = declared_dim(node.attr)
+            return d if d is not None else UNKNOWN
+        if isinstance(node, ast.BinOp):
+            return self._binop(node, env)
+        if isinstance(node, ast.UnaryOp):
+            return self.dim_of(node.operand, env)
+        if isinstance(node, ast.Compare):
+            return self._compare(node, env)
+        if isinstance(node, ast.Call):
+            return self._call(node, env)
+        if isinstance(node, ast.IfExp):
+            self.dim_of(node.test, env)
+            return self._merge(self.dim_of(node.body, env),
+                               self.dim_of(node.orelse, env),
+                               node, "conditional branches")
+        if isinstance(node, ast.Subscript):
+            base = self.dim_of(node.value, env)
+            return base if isinstance(base, tuple) else UNKNOWN
+        if isinstance(node, ast.Dict):
+            vals = [self.dim_of(v, env) for v in node.values
+                    if v is not None]
+            if vals and all(v == ANY or v == ONE for v in vals):
+                return ONE
+            return UNKNOWN
+        return UNKNOWN
+
+    def _binop(self, node: ast.BinOp, env: dict):
+        left = self.dim_of(node.left, env)
+        right = self.dim_of(node.right, env)
+        op = node.op
+        if isinstance(op, ast.Mult):
+            return self._combine(left, right, _mul)
+        if isinstance(op, (ast.Div, ast.FloorDiv)):
+            return self._combine(left, right, _div)
+        if isinstance(op, (ast.Add, ast.Sub)):
+            what = "+" if isinstance(op, ast.Add) else "-"
+            return self._merge(left, right, node, f"'{what}' operands")
+        if isinstance(op, ast.Pow):
+            if left == ANY or left == ONE:
+                return left if left == ONE else ANY
+            if isinstance(left, tuple):
+                if (isinstance(node.right, ast.Constant)
+                        and isinstance(node.right.value, (int, float))):
+                    return _pow(left, float(node.right.value))
+                if (isinstance(node.right, ast.UnaryOp)
+                        and isinstance(node.right.op, ast.USub)
+                        and isinstance(node.right.operand, ast.Constant)):
+                    return _pow(left, -float(node.right.operand.value))
+            return UNKNOWN
+        return UNKNOWN
+
+    def _compare(self, node: ast.Compare, env: dict):
+        dims = [self.dim_of(node.left, env)]
+        dims += [self.dim_of(c, env) for c in node.comparators]
+        ordered = [isinstance(op, (ast.Lt, ast.LtE, ast.Gt, ast.GtE))
+                   for op in node.ops]
+        for i, is_ord in enumerate(ordered):
+            a, b = dims[i], dims[i + 1]
+            if (is_ord and isinstance(a, tuple) and isinstance(b, tuple)
+                    and a != b):
+                self._flag(node, f"compares {render(a)} against "
+                           f"{render(b)}")
+        return ONE
+
+    def _call(self, node: ast.Call, env: dict):
+        for arg in node.args:
+            self.dim_of(arg, env)
+        for kw in node.keywords:
+            if kw.arg is None:
+                continue
+            declared = declared_dim(kw.arg)
+            val = self.dim_of(kw.value, env)
+            if (declared is not None and isinstance(val, tuple)
+                    and val != declared):
+                self._flag(kw.value, f"passes {render(val)} as keyword "
+                           f"'{kw.arg}' which declares "
+                           f"{render(declared)}")
+        name = dotted(node.func)
+        short = (name or "").rsplit(".", 1)[-1] if name else ""
+        attr_name = node.func.attr if isinstance(node.func, ast.Attribute) \
+            else (name or "")
+        if name in _SQRT_FNS:
+            d = self.dim_of(node.args[0], env) if node.args else UNKNOWN
+            return _pow(d, 0.5) if isinstance(d, tuple) else d
+        if name in _DIMLESS_FNS or short in ("log", "log2", "exp"):
+            return ONE
+        if name in _PASSTHROUGH_FNS:
+            return self.dim_of(node.args[0], env) if node.args else UNKNOWN
+        if name in _MERGE_FNS or short in ("minimum", "maximum"):
+            out = ANY
+            for a in node.args:
+                out = self._merge(out, self.dim_of(a, env), node,
+                                  f"'{short or name}' arguments")
+            return out
+        if short in ("where", "clip"):
+            out = ANY
+            for a in node.args[1:]:
+                out = self._merge(out, self.dim_of(a, env), node,
+                                  f"'{short}' branches")
+            return out
+        # a callee whose *name* carries a unit suffix declares its result
+        d = suffix_dim(attr_name)
+        return d if d is not None else UNKNOWN
+
+    def _combine(self, a, b, op):
+        if a == ANY:
+            return b
+        if b == ANY:
+            return a
+        if isinstance(a, tuple) and isinstance(b, tuple):
+            return op(a, b)
+        return UNKNOWN
+
+    def _merge(self, a, b, node: ast.AST, what: str):
+        if isinstance(a, tuple) and isinstance(b, tuple):
+            if a != b:
+                self._flag(node, f"unit mismatch: {what} are "
+                           f"{render(a)} and {render(b)}")
+                return UNKNOWN
+            return a
+        if a == ANY:
+            return b
+        if b == ANY:
+            return a
+        return UNKNOWN
+
+    def _flag(self, node: ast.AST, message: str) -> None:
+        self.findings.append(Finding(
+            self.mod.path, getattr(node, "lineno", 1), RULE, message,
+            self.mod.scope_of(node)))
+
+
+def check(mod: ModuleInfo) -> list[Finding]:
+    checker = _UnitChecker(mod)
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            checker.check_function(node)
+    # deduplicate: nested defs are visited both standalone and (not) by
+    # the statement walker; identical findings collapse.
+    return sorted(set(checker.findings))

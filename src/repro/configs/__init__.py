@@ -7,7 +7,7 @@ tiny vocab) used by per-arch CPU smoke tests.
 
 from __future__ import annotations
 
-from repro.configs.base import ArchConfig, SHAPES, ShapeSpec
+from repro.configs.base import ArchConfig, SHAPES, ShapeSpec  # noqa: F401 — re-exported config vocabulary
 
 _ARCH_MODULES = (
     "deepseek_moe_16b",

@@ -146,7 +146,7 @@ def _evaluate(tech_name: str, dev: mtj.MTJDevice, node: TechNode,
     return Bitcell(
         name=tech_name,
         sense_latency_s=dev.sense_time_s,
-        sense_energy_j=mtj.sense_energy(dev, i_read, node.vdd),
+        sense_energy_j=mtj.sense_energy(dev, i_read, node.vdd_v),
         write_latency_set_s=t_set,
         write_latency_reset_s=t_reset,
         write_energy_set_j=mtj.switching_energy(dev, i_write, reset=False),
@@ -155,7 +155,7 @@ def _evaluate(tech_name: str, dev: mtj.MTJDevice, node: TechNode,
         fins_write=fins_write,
         area_norm=_AREA_BASE[tech_name] * _bitcell_scale("area_base", node)
         + _AREA_PER_FIN * _bitcell_scale("area_per_fin", node) * total_fins,
-        cell_leakage_w=total_fins * node.ioff_per_fin_a * node.vdd,
+        cell_leakage_w=total_fins * node.ioff_per_fin_a * node.vdd_v,
         read_current_a=i_read,
     )
 

@@ -91,26 +91,26 @@ class Periphery:
     anchor-pinned periphery constants left in the equations.
     """
 
-    t_gate: float                 # FO4-ish gate delay [s]
-    t_sense_amp: float            # sense-amp resolve time [s]
-    e_gate: float                 # per-gate switching energy [J]
+    t_gate_s: float                 # FO4-ish gate delay [s]
+    t_sense_amp_s: float            # sense-amp resolve time [s]
+    e_gate_j: float                 # per-gate switching energy [J]
     htree_ns_per_mm: float        # repeated-wire delay [ns/mm]
     htree_pj_per_mm_bit: float    # H-tree wire energy [pJ/(mm*bit)]
-    c_bitline_per_row: float      # F per cell on the bitline
-    c_wordline_per_col: float     # F per cell on the wordline
+    c_bitline_per_row_f: float      # F per cell on the bitline
+    c_wordline_per_col_f: float     # F per cell on the wordline
 
 
 # Field order is the engine's packing order (engine.NODE_FIELDS suffix).
 PERIPHERY_FIELDS = tuple(f.name for f in dataclasses.fields(Periphery))
 
 _PERIPHERY_16NM = Periphery(
-    t_gate=_T_GATE,
-    t_sense_amp=_T_SENSE_AMP,
-    e_gate=_E_GATE,
+    t_gate_s=_T_GATE,
+    t_sense_amp_s=_T_SENSE_AMP,
+    e_gate_j=_E_GATE,
     htree_ns_per_mm=_HTREE_NS_PER_MM,
     htree_pj_per_mm_bit=_HTREE_PJ_PER_MM_BIT,
-    c_bitline_per_row=_C_BITLINE_PER_ROW,
-    c_wordline_per_col=_C_WORDLINE_PER_COL,
+    c_bitline_per_row_f=_C_BITLINE_PER_ROW,
+    c_wordline_per_col_f=_C_WORDLINE_PER_COL,
 )
 
 
@@ -235,11 +235,11 @@ class CacheModel:
     # -- latency -------------------------------------------------------------
 
     def _decoder_delay(self, org: CacheOrg) -> float:
-        return math.log2(org.rows) * self.peri.t_gate
+        return math.log2(org.rows) * self.peri.t_gate_s
 
     def _wordline_delay(self, org: CacheOrg) -> float:
-        c_wl = org.cols * self.peri.c_wordline_per_col
-        return 2.2 * c_wl * (self.node.vdd / self.node.ion_per_fin_a) * 0.05
+        c_wl = org.cols * self.peri.c_wordline_per_col_f
+        return 2.2 * c_wl * (self.node.vdd_v / self.node.ion_per_fin_a) * 0.05
 
     def _bitline_time(self, org: CacheOrg) -> float:
         """Bitline development to the sense threshold.
@@ -248,17 +248,17 @@ class CacheModel:
         capacitance by the sense margin, then the device sense time applies.
         SRAM: differential discharge by the (larger) cell read current.
         """
-        c_bl = org.rows * self.peri.c_bitline_per_row
+        c_bl = org.rows * self.peri.c_bitline_per_row_f
         i_read = self.cell.read_current_a
         t_slew = c_bl * self.node.sense_voltage_v / i_read
-        return t_slew + self.cell.sense_latency_s + self.peri.t_sense_amp
+        return t_slew + self.cell.sense_latency_s + self.peri.t_sense_amp_s
 
     def _routing_delay(self, capacity_bytes: int, org: CacheOrg) -> float:
         """Predecoder + subarray-select tree: grows with subarray count —
         the term that penalizes over-fragmented organizations and gives
         Algorithm 1 an interior optimum."""
         n_sub = self._subarrays(capacity_bytes, org)
-        return 2.0 * self.peri.t_gate * math.log2(max(2, n_sub))
+        return 2.0 * self.peri.t_gate_s * math.log2(max(2, n_sub))
 
     def read_latency(self, capacity_bytes: int, org: CacheOrg) -> float:
         ht = self._htree_mm(capacity_bytes, org) \
@@ -267,11 +267,11 @@ class CacheModel:
         array = self._decoder_delay(org) + self._wordline_delay(org) + self._bitline_time(org)
         tag = self._decoder_delay(org) + self._wordline_delay(org) + 0.4 * self._bitline_time(org)
         if org.access == "sequential":
-            lat = ht + route + tag + array + 2 * self.peri.t_gate
+            lat = ht + route + tag + array + 2 * self.peri.t_gate_s
         elif org.access == "fast":
-            lat = ht + route + array + self.peri.t_gate
+            lat = ht + route + array + self.peri.t_gate_s
         else:  # normal: tag || data, way-select mux at the end
-            lat = ht + route + max(tag, array) + 3 * self.peri.t_gate
+            lat = ht + route + max(tag, array) + 3 * self.peri.t_gate_s
         return lat * self.cal.k_read_lat \
             * self._stress(capacity_bytes, _SRAM_LAT_STRESS_EXP)
 
@@ -292,24 +292,24 @@ class CacheModel:
         sense = bits * ways_sensed * self.cell.sense_energy_j
         # bitline charging: read current drawn for the bitline time across
         # the sensed columns
-        c_bl = org.rows * self.peri.c_bitline_per_row
-        bitline = bits * ways_sensed * c_bl * self.node.vdd * self.node.vdd
+        c_bl = org.rows * self.peri.c_bitline_per_row_f
+        bitline = bits * ways_sensed * c_bl * self.node.vdd_v * self.node.vdd_v
         ht = (self._htree_mm(capacity_bytes, org)
               * self.peri.htree_pj_per_mm_bit * 1e-12 * bits)
-        decoder = math.log2(org.rows) * 64 * self.peri.e_gate
-        route = self._subarrays(capacity_bytes, org) * 4 * self.peri.e_gate
+        decoder = math.log2(org.rows) * 64 * self.peri.e_gate_j
+        route = self._subarrays(capacity_bytes, org) * 4 * self.peri.e_gate_j
         return (sense + bitline + ht + decoder + route) * self.cal.k_read_e
 
     def write_energy(self, capacity_bytes: int, org: CacheOrg) -> float:
         bits = LINE_BYTES * 8
         flips = bits * (FLIP_P if self.mem != "sram" else 1.0)
         cellw = flips * self.cell.write_energy_avg_j
-        c_bl = org.rows * self.peri.c_bitline_per_row
-        bitline = bits * c_bl * self.node.vdd * self.node.vdd * 2.0
+        c_bl = org.rows * self.peri.c_bitline_per_row_f
+        bitline = bits * c_bl * self.node.vdd_v * self.node.vdd_v * 2.0
         ht = (self._htree_mm(capacity_bytes, org)
               * self.peri.htree_pj_per_mm_bit * 1e-12 * bits)
-        decoder = math.log2(org.rows) * 64 * self.peri.e_gate
-        route = self._subarrays(capacity_bytes, org) * 4 * self.peri.e_gate
+        decoder = math.log2(org.rows) * 64 * self.peri.e_gate_j
+        route = self._subarrays(capacity_bytes, org) * 4 * self.peri.e_gate_j
         return (cellw + bitline + ht + decoder + route) * self.cal.k_write_e
 
     # -- leakage ---------------------------------------------------------------

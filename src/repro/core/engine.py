@@ -99,7 +99,7 @@ CAL_FIELDS = (
 # each node row by *value* (anchor-periphery rows to the anchor trace),
 # so the 16 nm anchor stays bit-identical to the scalar calibration while
 # scaled nodes remain runtime tensor inputs: two compilations total, ever.
-TECHNODE_FIELDS = ("vdd", "ion_per_fin_a", "sense_voltage_v",
+TECHNODE_FIELDS = ("vdd_v", "ion_per_fin_a", "sense_voltage_v",
                    "sram_cell_area_um2")
 NODE_FIELDS = TECHNODE_FIELDS + PERIPHERY_FIELDS
 _N_TECHNODE = len(TECHNODE_FIELDS)
@@ -164,11 +164,11 @@ def _ppa_kernel(cell, cal, is_sram, node, peri, caps_bytes, banks, rows,
     (vdd, ion, sense_v, sram_cell_um2) = (N(node[:, i])
                                           for i in range(node.shape[1]))
     if anchor_peri:
-        (t_gate, t_sense_amp, e_gate, htree_ns_per_mm, htree_pj_per_mm_bit,
-         c_bitline_per_row, c_wordline_per_col) = _PERI_16NM_ROW
+        (t_gate_s, t_sense_amp_s, e_gate_j, htree_ns_per_mm, htree_pj_per_mm_bit,
+         c_bitline_per_row_f, c_wordline_per_col_f) = _PERI_16NM_ROW
     else:
-        (t_gate, t_sense_amp, e_gate, htree_ns_per_mm, htree_pj_per_mm_bit,
-         c_bitline_per_row, c_wordline_per_col) = (
+        (t_gate_s, t_sense_amp_s, e_gate_j, htree_ns_per_mm, htree_pj_per_mm_bit,
+         c_bitline_per_row_f, c_wordline_per_col_f) = (
             N(peri[:, i]) for i in range(peri.shape[1]))
     (i_read, sense_lat, sense_e, wlat_avg, we_avg, area_norm,
      cell_leak) = (M(cell[:, :, i]) for i in range(cell.shape[2]))
@@ -201,19 +201,19 @@ def _ppa_kernel(cell, cal, is_sram, node, peri, caps_bytes, banks, rows,
     stress_leak = jnp.where(sram, stress_base ** _SRAM_LEAK_STRESS_EXP, 1.0)
 
     # -- latency -----------------------------------------------------------
-    decoder = jnp.log2(rows) * t_gate
-    c_wl = cols * c_wordline_per_col
+    decoder = jnp.log2(rows) * t_gate_s
+    c_wl = cols * c_wordline_per_col_f
     wordline = 2.2 * c_wl * (vdd / ion) * 0.05
-    c_bl = rows * c_bitline_per_row
-    bitline = c_bl * sense_v / i_read + sense_lat + t_sense_amp
-    routing = 2.0 * t_gate * jnp.log2(jnp.maximum(2.0, n_sub))
+    c_bl = rows * c_bitline_per_row_f
+    bitline = c_bl * sense_v / i_read + sense_lat + t_sense_amp_s
+    routing = 2.0 * t_gate_s * jnp.log2(jnp.maximum(2.0, n_sub))
     ht_lat = htree_mm * htree_ns_per_mm * 1e-9
 
     array_t = decoder + wordline + bitline
     tag_t = decoder + wordline + 0.4 * bitline
-    lat_seq = ht_lat + routing + tag_t + array_t + 2 * t_gate
-    lat_fast = ht_lat + routing + array_t + t_gate
-    lat_norm = ht_lat + routing + jnp.maximum(tag_t, array_t) + 3 * t_gate
+    lat_seq = ht_lat + routing + tag_t + array_t + 2 * t_gate_s
+    lat_fast = ht_lat + routing + array_t + t_gate_s
+    lat_norm = ht_lat + routing + jnp.maximum(tag_t, array_t) + 3 * t_gate_s
     read_lat = jnp.where(acc == _SEQ, lat_seq,
                          jnp.where(acc == _FAST, lat_fast, lat_norm))
     read_lat = read_lat * k_read_lat * stress_lat
@@ -226,8 +226,8 @@ def _ppa_kernel(cell, cal, is_sram, node, peri, caps_bytes, banks, rows,
     sense = line_bits * ways_sensed * sense_e
     bl_read = line_bits * ways_sensed * c_bl * vdd * vdd
     ht_e = htree_mm * htree_pj_per_mm_bit * 1e-12 * line_bits
-    dec_e = jnp.log2(rows) * 64 * e_gate
-    route_e = n_sub * 4 * e_gate
+    dec_e = jnp.log2(rows) * 64 * e_gate_j
+    route_e = n_sub * 4 * e_gate_j
     read_e = (sense + bl_read + ht_e + dec_e + route_e) * k_read_e
 
     flips = line_bits * jnp.where(sram, 1.0, FLIP_P)

@@ -131,14 +131,14 @@ def switching_energy(dev: MTJDevice, i_write_a: float, *, reset: bool) -> float:
     return i_write_a * i_write_a * r * t
 
 
-def sense_energy(dev: MTJDevice, i_read_a: float, vdd: float,
+def sense_energy(dev: MTJDevice, i_read_a: float, vdd_v: float,
                  sense_time_s: float | None = None) -> float:
     """Read (sense) energy: the read current is drawn from VDD for the
     sensing window.  The paper's Table I values correspond to
     I_read = 146 uA (STT: 4 fins, wordline under-driven to respect the
     read-disturb limit) and I_read = 42 uA (SOT: 1-fin dedicated path)."""
     t = dev.sense_time_s if sense_time_s is None else sense_time_s
-    return vdd * i_read_a * t
+    return vdd_v * i_read_a * t
 
 
 def max_read_current(dev: MTJDevice) -> float:

@@ -5,7 +5,7 @@ from __future__ import annotations
 import csv
 import io
 import os
-from collections.abc import Iterable, Mapping, Sequence
+from collections.abc import Mapping, Sequence
 
 
 def csv_str(rows: Sequence[Mapping[str, object]],

@@ -33,7 +33,7 @@ class TechNode:
 
     name: str = "16nm-finfet"
     feature_size_m: float = 16e-9
-    vdd: float = 0.8
+    vdd_v: float = 0.8
     # Per-fin drive current (order-of-magnitude FinFET value; the absolute
     # scale is calibrated out against Table I/II).
     ion_per_fin_a: float = 42e-6
@@ -57,7 +57,7 @@ TECH_16NM = TechNode()
 # Scaling exponents relative to the anchor: parameter at a scaled node is
 # anchor_value * s**exp with s = feature_size / 16 nm (s < 1 for smaller
 # nodes).  First-order post-Dennard rules:
-#   vdd                  weak supply scaling (0.8 V @16 -> ~0.71 V @7)
+#   vdd_v                  weak supply scaling (0.8 V @16 -> ~0.71 V @7)
 #   ion_per_fin_a        per-fin drive roughly flat across FinFET nodes
 #   ioff_per_fin_a       LP access-device leakage worsens mildly
 #   sram_cell_area_um2   classical s^2 geometry scaling
@@ -66,7 +66,7 @@ TECH_16NM = TechNode()
 #                        leakage blow-up the DTCO analysis projects
 #   sense_voltage_v      sense margin held constant
 SCALING_EXPONENTS = {
-    "vdd": 0.15,
+    "vdd_v": 0.15,
     "ion_per_fin_a": 0.0,
     "ioff_per_fin_a": -0.5,
     "sram_cell_area_um2": 2.0,
@@ -76,7 +76,7 @@ SCALING_EXPONENTS = {
 
 # Periphery-fit scaling consumed by the calibration derivation rule
 # (calibration.get): logic area follows the node; periphery leakage per MB
-# falls slightly (narrower devices, lower vdd) despite leakier transistors.
+# falls slightly (narrower devices, lower vdd_v) despite leakier transistors.
 PERI_AREA_EXP = 2.0
 PERI_LEAK_EXP = 0.3
 
@@ -112,8 +112,8 @@ MTJ_SCALING_EXPONENTS = {
 }
 
 # Bitcell-level constants (bitcell.py).
-#   i_read/i_write_per_fin:  MRAM access-path drive derates with vdd — the
-#       write path must hold vdd headroom across the MTJ stack, eroding as
+#   i_read/i_write_per_fin:  MRAM access-path drive derates with vdd_v — the
+#       write path must hold vdd_v headroom across the MTJ stack, eroding as
 #       the supply scales (the infeasibility mechanism at deep nodes).
 #   area_base:  the MTJ pillar + BEOL keep-out is via/metal-pitch limited
 #       and shrinks slower than the 6T footprint, so the SRAM-normalized
@@ -132,23 +132,23 @@ BITCELL_SCALING_EXPONENTS = {
 }
 
 # Periphery building blocks (cachemodel.Periphery fields).
-#   t_gate:      FO4 delay ~ C*V/I_drive (C and V fall, drive per um flat).
-#   t_sense_amp: latch resolve ~ C/gm.
-#   e_gate:      CV^2 per switched gate.
+#   t_gate_s:      FO4 delay ~ C*V/I_drive (C and V fall, drive per um flat).
+#   t_sense_amp_s: latch resolve ~ C/gm.
+#   e_gate_j:      CV^2 per switched gate.
 #   htree_ns_per_mm:  repeated-wire delay per mm worsens as wire RC blows
-#       up faster than repeaters improve (partially recovered by vdd/gate
+#       up faster than repeaters improve (partially recovered by vdd_v/gate
 #       gains — the classic interconnect-dominated regime).
 #   htree_pj_per_mm_bit:  wire energy per mm*bit ~ C_wire * V^2 (per-mm
 #       wire cap roughly flat, V^2 falls).
 #   c_bitline/c_wordline:  per-cell wire capacitance tracks the cell pitch.
 PERIPHERY_SCALING_EXPONENTS = {
-    "t_gate": 1.15,
-    "t_sense_amp": 1.0,
-    "e_gate": 1.3,
+    "t_gate_s": 1.15,
+    "t_sense_amp_s": 1.0,
+    "e_gate_j": 1.3,
     "htree_ns_per_mm": -0.5,
     "htree_pj_per_mm_bit": 0.3,
-    "c_bitline_per_row": 1.0,
-    "c_wordline_per_col": 1.0,
+    "c_bitline_per_row_f": 1.0,
+    "c_wordline_per_col_f": 1.0,
 }
 
 # Validated projection range.  The exponent tables above are first-order

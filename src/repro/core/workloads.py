@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from collections.abc import Sequence
 
 DTYPE_BYTES = 4  # Caffe fp32
 

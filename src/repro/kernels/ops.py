@@ -8,7 +8,6 @@ for short sequences where the quadratic logits are cheap.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import flash_attention as fa
 from repro.kernels import ref

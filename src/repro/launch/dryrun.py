@@ -22,7 +22,6 @@ import re
 import time
 
 import jax
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 import repro.configs as configs
 from repro.configs.base import SHAPES

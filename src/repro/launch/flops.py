@@ -100,41 +100,41 @@ def account(cfg: ArchConfig, shape: ShapeSpec) -> Accounting:
     model_flops = (6.0 if is_train else 2.0) * n_active * tokens
 
     # KV cache traffic (serving)
-    kv_r = kv_w = 0.0
+    kv_read = kv_write = 0.0
     if shape.is_decode:
         if cfg.rwkv:
             state = cfg.n_layers * cfg.n_heads \
                 * (cfg.d_model // cfg.n_heads) ** 2 * 2
-            kv_r = kv_w = float(b * state * 2)
+            kv_read = kv_write = float(b * state * 2)
         elif cfg.mla is not None:
             per_tok = cfg.n_layers * (cfg.mla.kv_lora_rank
                                       + cfg.mla.qk_rope_dim) * 2
-            kv_r, kv_w = float(b * s * per_tok), float(b * per_tok)
+            kv_read, kv_write = float(b * s * per_tok), float(b * per_tok)
         elif cfg.ssm is not None:
             w = cfg.ssm.sliding_window
             glb = len(cfg.ssm.global_attn_layers)
             swa = cfg.n_layers - glb
             per_l = cfg.n_kv_heads * cfg.head_dim * 2 * 2
-            kv_r = float(b * (glb * s + swa * w) * per_l
+            kv_read = float(b * (glb * s + swa * w) * per_l
                          + b * cfg.n_layers * cfg.d_model
                          * cfg.ssm.state_dim * 4)
-            kv_w = float(b * cfg.n_layers * per_l
+            kv_write = float(b * cfg.n_layers * per_l
                          + b * cfg.n_layers * cfg.d_model
                          * cfg.ssm.state_dim * 4)
         else:
             per_l = cfg.n_kv_heads * cfg.head_dim * 2 * 2
-            kv_r, kv_w = float(b * s * cfg.n_layers * per_l), \
+            kv_read, kv_write = float(b * s * cfg.n_layers * per_l), \
                 float(b * cfg.n_layers * per_l)
     elif shape.kind == "prefill":
         per_l = ((cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim) * 2
                  if cfg.mla else cfg.n_kv_heads * cfg.head_dim * 2 * 2)
-        kv_w = float(b * s * cfg.n_layers * per_l)
+        kv_write = float(b * s * cfg.n_layers * per_l)
 
     pbytes = n_total * (4.0 if is_train else 2.0)
     act_bytes = 16.0 * cfg.n_layers * tokens * cfg.d_model * 2.0 * \
         (1.0 if is_train else 0.25)
-    hbm = pbytes * (6.0 if is_train else 1.0) + act_bytes + kv_r + kv_w
+    hbm = pbytes * (6.0 if is_train else 1.0) + act_bytes + kv_read + kv_write
     return Accounting(flops=flops, model_flops=model_flops, hbm_bytes=hbm,
                       param_bytes=pbytes, param_count=n_total,
                       active_param_count=n_active,
-                      kv_read_bytes=kv_r, kv_write_bytes=kv_w)
+                      kv_read_bytes=kv_read, kv_write_bytes=kv_write)

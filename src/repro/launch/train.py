@@ -12,7 +12,6 @@ injection, optional gradient compression).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax

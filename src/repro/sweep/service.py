@@ -298,8 +298,9 @@ class Coalescer:
                 self._run_group(group)
 
     def _run_group(self, group: list[_Pending]) -> None:
-        self.batches += 1
-        self.max_group = max(self.max_group, len(group))
+        with self._cv:  # stats() reads these counters concurrently
+            self.batches += 1
+            self.max_group = max(self.max_group, len(group))
         try:
             if len(group) == 1:
                 group[0].result = self._evaluate(group[0].spec)
@@ -312,7 +313,8 @@ class Coalescer:
                         p.result = superset.subset(p.spec)
                     except BaseException as e:  # noqa: BLE001 — isolate
                         p.error = e
-                self.coalesced_requests += len(group)
+                with self._cv:
+                    self.coalesced_requests += len(group)
         except BaseException as e:  # noqa: BLE001 — the worker must live
             for p in group:
                 if p.result is None and p.error is None:
@@ -541,7 +543,8 @@ class SweepService:
             workload_engine.warmup_fold(shape)
         info["fold_shapes"] += len(shapes)
         info["warmup_s"] = time.perf_counter() - t0
-        self.warmup_info = info
+        with self._lock:  # stats() snapshots warmup_info concurrently
+            self.warmup_info = info
         return info
 
     # -- lifecycle ---------------------------------------------------------
@@ -583,7 +586,8 @@ class SweepService:
         if self._closed:
             return
         self.drain(timeout)
-        self._closed = True
+        with self._lock:  # handle() checks closed from transport threads
+            self._closed = True
         if self.coalescer is not None:
             self.coalescer.close()
 

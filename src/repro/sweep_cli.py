@@ -56,7 +56,7 @@ import time
 from collections.abc import Mapping
 
 from repro.core import report
-from repro.core.sweep import ShardPlan, SymbolicSweepSpec, n_cells
+from repro.core.sweep import ShardPlan, SymbolicSweepSpec
 from repro.sweep.service import (  # noqa: F401 — re-exported vocabulary
     SHARD_KEYS,
     WANTS,

@@ -55,7 +55,7 @@ def test_scaled_node_directions():
     for smaller, larger in ((TECH_7NM, TECH_10NM), (TECH_10NM, TECH_12NM),
                             (TECH_12NM, TECH_16NM)):
         assert smaller.sram_cell_area_um2 < larger.sram_cell_area_um2
-        assert smaller.vdd < larger.vdd
+        assert smaller.vdd_v < larger.vdd_v
         assert smaller.sram_cell_leak_w > larger.sram_cell_leak_w
 
 

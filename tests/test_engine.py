@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 
 from repro.core import engine, tuner
-from repro.core.cachemodel import ACCESS_TYPES, CacheModel, CacheOrg
+from repro.core.cachemodel import CacheModel, CacheOrg
 from repro.core.tech import TECH_16NM, TECH_7NM, TECH_10NM
 
 MEMS = ("sram", "stt", "sot")

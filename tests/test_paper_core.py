@@ -1,6 +1,5 @@
 """Validation of the DeepNVM++ reproduction against the paper's numbers."""
 
-import math
 
 import pytest
 
