@@ -101,10 +101,10 @@ def _node_retrace_count() -> int:
     # the runtime-periphery trace.
     engine.sweep(caps, nodes=TECH_16NM)
     engine.sweep(caps, nodes=scaled_node(13e-9, name="bench-13nm"))
-    base = engine._ppa_kernel._cache_size()
+    base = engine.ppa_fn._cache_size()
     for nm in (11.0, 9.0, 8.0):
         engine.sweep(caps, nodes=scaled_node(nm * 1e-9, name=f"bench-{nm:g}nm"))
-    return engine._ppa_kernel._cache_size() - base
+    return engine.ppa_fn._cache_size() - base
 
 
 def _check_parity(loop_rows, batched_rows, rel=1e-9) -> float:

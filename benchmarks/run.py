@@ -51,6 +51,8 @@ MODULES = (
     "bench_shard",
     "bench_serve",
     "bench_analysis",
+    "bench_inverse",
+    "fig_sensitivity",
 )
 
 

@@ -131,8 +131,46 @@ def _write_current(node: TechNode, fins_write: int) -> float:
         * _bitcell_scale("i_write_per_fin", node)
 
 
+def base_area_norm(tech_name: str, node: TechNode = TECH_16NM) -> float:
+    """The fin-independent bitcell footprint term (MTJ pillar + BEOL
+    keep-out, normalized to the foundry 6T cell) at ``node`` — the anchor
+    value every ``area_base_norm`` override (inverse-design leaf) is
+    centered on."""
+    return _AREA_BASE[tech_name] * _bitcell_scale("area_base", node)
+
+
+def fin_assignments(tech_name: str) -> tuple[tuple[int, int, bool], ...]:
+    """The full layout-feasible ``(fins_read, fins_write, shared)`` grid the
+    characterization sweep enumerates: STT shares one access device across
+    both paths (1..MAX_FINS shared fins); SOT decouples them, each path
+    needs >= 1 fin, and the pair fits the same MAX_FINS budget.  Static —
+    the inverse path's softmin relaxes over exactly this tuple."""
+    if tech_name == "stt":
+        return tuple((f, f, True) for f in range(1, MAX_FINS + 1))
+    if tech_name == "sot":
+        return tuple((fr, fw, False)
+                     for fr in range(1, MAX_FINS)
+                     for fw in range(1, MAX_FINS)
+                     if fr + fw <= MAX_FINS)
+    raise ValueError(f"no fin sweep for tech {tech_name!r}")
+
+
+def assemble(tech_name: str, node: TechNode, fins_read: int, fins_write: int,
+             shared: bool, *, device: mtj.MTJDevice | None = None,
+             area_base_norm: float | None = None) -> Bitcell | None:
+    """Assemble one explicit fin assignment into a :class:`Bitcell`
+    (None if infeasible) — the standard-path re-evaluation entry for
+    inverse design: ``device`` substitutes a :func:`mtj.custom_device`
+    with converged leaves and ``area_base_norm`` overrides the
+    fin-independent footprint term (default :func:`base_area_norm`)."""
+    dev = mtj.device(tech_name, node) if device is None else device
+    return _evaluate(tech_name, dev, node, fins_read, fins_write, shared,
+                     area_base_norm=area_base_norm)
+
+
 def _evaluate(tech_name: str, dev: mtj.MTJDevice, node: TechNode,
-              fins_read: int, fins_write: int, shared: bool) -> Bitcell | None:
+              fins_read: int, fins_write: int, shared: bool,
+              area_base_norm: float | None = None) -> Bitcell | None:
     """Evaluate one fin assignment; None if infeasible."""
     total_fins = fins_write if shared else fins_read + fins_write
     if total_fins > MAX_FINS or fins_read < 1 or fins_write < 1:
@@ -143,6 +181,8 @@ def _evaluate(tech_name: str, dev: mtj.MTJDevice, node: TechNode,
     if not (math.isfinite(t_set) and math.isfinite(t_reset)):
         return None  # below critical current: write never completes
     i_read = _read_current(tech_name, dev, node, fins_read)
+    if area_base_norm is None:
+        area_base_norm = base_area_norm(tech_name, node)
     return Bitcell(
         name=tech_name,
         sense_latency_s=dev.sense_time_s,
@@ -153,7 +193,7 @@ def _evaluate(tech_name: str, dev: mtj.MTJDevice, node: TechNode,
         write_energy_reset_j=mtj.switching_energy(dev, i_write, reset=True),
         fins_read=fins_read,
         fins_write=fins_write,
-        area_norm=_AREA_BASE[tech_name] * _bitcell_scale("area_base", node)
+        area_norm=area_base_norm
         + _AREA_PER_FIN * _bitcell_scale("area_per_fin", node) * total_fins,
         cell_leakage_w=total_fins * node.ioff_per_fin_a * node.vdd_v,
         read_current_a=i_read,
@@ -180,21 +220,11 @@ def characterize(tech_name: str, node: TechNode = TECH_16NM) -> Bitcell:
     if tech_name == "sram":
         return sram_bitcell(node)
     dev = mtj.device(tech_name, node)
-    shared = tech_name == "stt"
-    candidates = []
-    if shared:
-        for fins in range(1, MAX_FINS + 1):
-            cell = _evaluate(tech_name, dev, node, fins, fins, shared=True)
-            if cell is not None:
-                candidates.append(cell)
-        max_write_fins = MAX_FINS
-    else:
-        for fr in range(1, MAX_FINS):
-            for fw in range(1, MAX_FINS):
-                cell = _evaluate(tech_name, dev, node, fr, fw, shared=False)
-                if cell is not None:
-                    candidates.append(cell)
-        max_write_fins = MAX_FINS - 1  # >= 1 fin reserved for the read path
+    assignments = fin_assignments(tech_name)
+    candidates = [cell for fr, fw, shared in assignments
+                  if (cell := _evaluate(tech_name, dev, node, fr, fw,
+                                        shared)) is not None]
+    max_write_fins = max(fw for _, fw, _ in assignments)
     if not candidates:
         best_i = _write_current(node, max_write_fins)
         ic0 = max(dev.ic0_set_a, dev.ic0_reset_a)

@@ -48,6 +48,8 @@ import functools
 import itertools
 import math
 
+import numpy as np
+
 from repro.core import tech
 from repro.core.bitcell import Bitcell, characterize
 from repro.core.tech import TechNode, TECH_16NM, mm2_from_um2
@@ -98,6 +100,12 @@ class Periphery:
     htree_pj_per_mm_bit: float    # H-tree wire energy [pJ/(mm*bit)]
     c_bitline_per_row_f: float      # F per cell on the bitline
     c_wordline_per_col_f: float     # F per cell on the wordline
+
+    def as_array(self) -> np.ndarray:
+        """Parameter vector (float64, PERIPHERY_FIELDS order): the
+        periphery suffix of one ``engine.node_row``."""
+        return np.array([getattr(self, f) for f in PERIPHERY_FIELDS],
+                        dtype=np.float64)
 
 
 # Field order is the engine's packing order (engine.NODE_FIELDS suffix).

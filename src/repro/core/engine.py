@@ -250,6 +250,28 @@ def _ppa_kernel(cell, cal, is_sram, node, peri, caps_bytes, banks, rows,
     )
 
 
+# Public pure-function entry point to the batched PPA equations.  This is
+# the *same* jitted callable the memoized ``design_table`` path dispatches
+# (not a wrapper around it), so any consumer calling it — the inverse
+# design's differentiable lowering, parity tests, the bench_engine retrace
+# counter — provably shares the exact compiled HLO and trace cache with
+# the memoized path: a new caller can never introduce a third trace.
+# Differentiable in ``cell``/``cal``/``node``/``peri`` (jax.grad composes
+# through jit), which is what repro.inverse builds on.
+ppa_fn = _ppa_kernel
+
+
+def node_row(node: TechNode) -> np.ndarray:
+    """One [NODE_FIELDS] float64 row of the node parameter matrix: the
+    TechNode supply/drive/sense/cell-area parameters followed by the
+    node-derived periphery bundle — the per-node runtime input of
+    ``ppa_fn`` (split as ``row[:len(TECHNODE_FIELDS)]`` / the rest)."""
+    return np.concatenate([
+        np.array([getattr(node, f) for f in TECHNODE_FIELDS],
+                 dtype=np.float64),
+        periphery(node).as_array()])
+
+
 @dataclasses.dataclass(frozen=True)
 class DesignTable:
     """Evaluated (node x tech x capacity x organization) sweep + Algorithm 1.
@@ -455,10 +477,7 @@ def _tech_matrices(mems, cells, cals, nodes):
     cal_mat = np.array([[[getattr(cal, f) for f in CAL_FIELDS]
                          for cal in row] for row in cals], dtype=np.float64)
     is_sram = np.array([m == "sram" for m in mems])
-    node_mat = np.array(
-        [[getattr(nd, f) for f in TECHNODE_FIELDS]
-         + [getattr(periphery(nd), f) for f in PERIPHERY_FIELDS]
-         for nd in nodes], dtype=np.float64)
+    node_mat = np.stack([node_row(nd) for nd in nodes])
     return cell_mat, cal_mat, is_sram, node_mat
 
 

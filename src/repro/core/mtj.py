@@ -114,6 +114,17 @@ def device(flavor: str, node: TechNode = TECH_16NM) -> MTJDevice:
         anchor, **{f: getattr(anchor, f) * s ** e for f, e in exps.items()})
 
 
+def custom_device(flavor: str, node: TechNode = TECH_16NM,
+                  **overrides: float) -> MTJDevice:
+    """Node-projected device with explicit field overrides — the standard
+    (non-relaxed) re-evaluation entry for inverse design: a converged
+    continuous leaf (say ``ic0_set_a``) replaces the projected anchor while
+    every untouched field keeps its ``device(flavor, node)`` value.
+    Uncached on purpose: override values come from optimizer trajectories,
+    not a small enumerable grid."""
+    return dataclasses.replace(device(flavor, node), **overrides)
+
+
 def switching_time(dev: MTJDevice, i_write_a: float, *, reset: bool) -> float:
     """Precessional switching time; +inf below the critical current."""
     ic0 = dev.ic0_reset_a if reset else dev.ic0_set_a

@@ -1,0 +1,46 @@
+"""Gradient-based inverse design over the DeepNVM++ PPA model.
+
+The reproduction's engine is one pure jitted float64 JAX function from
+device constants to EDP, so questions the paper only grid-argmins —
+"which device knob buys the most EDP at 7 nm?", "what pulse width and
+cell footprint hit a target EDP under an area budget?" — become
+gradient problems:
+
+* :mod:`repro.inverse.bounds` — the continuous *leaves*: per (flavor,
+  node) device anchors (Ic0, switching time constants, write-path
+  resistances, sense window) plus the fin-independent bitcell footprint,
+  each bounded multiplicatively around its node-projected center using
+  the documented scaling-exponent tables.
+* :mod:`repro.inverse.relax` — the differentiable lowering: an
+  unmemoized, non-argmin variant of device -> bitcell -> periphery ->
+  PPA -> workload-fold where the discrete choices (fin assignments, the
+  (mem, capacity, node) corner, the 288-org grid) are temperature-
+  annealed softmin mixtures, the STT scaling wall is a differentiable
+  penalty, and the PPA equations are the *same* compiled kernel
+  (``engine.ppa_fn``) the memoized sweep path dispatches.
+* :mod:`repro.inverse.driver` — batched multi-start projected Adam
+  (``vmap`` over starts) solving ``minimize EDP s.t. area <= budget``
+  and target-hitting formulations, plus the standard-path re-evaluation
+  (``mtj.custom_device`` + ``bitcell.assemble`` + ``engine.evaluate``)
+  that verifies every converged point at <= 1e-12 parity.
+* :mod:`repro.inverse.problem` — the serializable ``deepnvm.inverse/1``
+  problem document (an embedded sweepspec plus objective/budget/solver
+  fields) and the typed :class:`InverseResult`.
+* :mod:`repro.inverse.sensitivity` — d(metric)/d(param) elasticity
+  tables per (node, tech, scenario), ranking which device knob buys the
+  most EDP at each node (benchmarks/fig_sensitivity.py).
+"""
+
+from repro.inverse.bounds import LEAF_FIELDS, LeafGroup, leaf_groups
+from repro.inverse.driver import grid_argmin, recover_corner, solve, verify
+from repro.inverse.problem import SCHEMA, InverseProblem, InverseResult
+from repro.inverse.relax import Lowered, lower
+from repro.inverse.sensitivity import sensitivity_rows
+
+__all__ = [
+    "LEAF_FIELDS", "LeafGroup", "leaf_groups",
+    "grid_argmin", "recover_corner", "solve", "verify",
+    "SCHEMA", "InverseProblem", "InverseResult",
+    "Lowered", "lower",
+    "sensitivity_rows",
+]

@@ -31,6 +31,14 @@ the production form the ROADMAP's "heavy traffic" north star asks for:
   cache and the coalescer, mirroring ``run()``'s no-memo policy for
   mega-results.
 
+* **Backpressure**: a bounded admission gate (``max_pending``
+  concurrent evaluations; cache hits and ops are never refused) and a
+  request-document size limit (``max_body_bytes``; the HTTP transport
+  refuses oversize bodies before reading them).  Refusals answer with
+  ``{"ok": false, "status": 413 | 429, "error": ...}`` — HTTP maps the
+  status onto the response code, JSONL clients read it from the
+  document — and are counted in ``stats()["limits"]``.
+
 * **Warmup** (:meth:`SweepService.warmup`): resolves the given specs,
   builds their real design tables through the capacity-bucketed circuit
   path (priming bitcell characterization, calibration, Algorithm-1
@@ -80,6 +88,20 @@ from repro.core.sweep import (
 WANTS = ("rows", "summary", "pareto", "plateaus")
 SHARD_KEYS = ("scenario_chunk", "design_chunk", "devices", "by_width")
 OPS = ("ping", "stats")
+
+
+class RequestTooLarge(ValueError):
+    """Request document exceeds ``max_body_bytes`` (HTTP 413)."""
+
+    http_status = 413
+
+
+class ServiceOverloaded(RuntimeError):
+    """Admission refused: ``max_pending`` evaluations already in flight
+    (HTTP 429).  Cache hits and ops are never refused — only work that
+    would start a new evaluation."""
+
+    http_status = 429
 
 
 # ---------------------------------------------------------------------------
@@ -391,7 +413,8 @@ class SweepService:
 
     def __init__(self, window_ms: float = 5.0, max_batch: int = 64,
                  coalesce: bool = True, cache_size: int = 256,
-                 evaluate=evaluate_spec):
+                 evaluate=evaluate_spec, max_pending: int = 64,
+                 max_body_bytes: int = 1 << 20):
         self._evaluate = evaluate
         self.cache = ResultCache(cache_size)
         self.coalescer = Coalescer(evaluate, window_ms, max_batch) \
@@ -404,15 +427,29 @@ class SweepService:
         self.requests = 0
         self.ok = 0
         self.errors = 0
+        # Backpressure limits: evaluations admitted concurrently, and the
+        # largest request document a transport will read.
+        self.max_pending = max(1, max_pending)
+        self.max_body_bytes = max(1, max_body_bytes)
+        self._pending = 0
+        self.rejected_too_large = 0
+        self.rejected_overloaded = 0
         self._inflight = 0
         self._inflight_cv = threading.Condition()
 
     # -- request handling --------------------------------------------------
 
     def handle(self, request: Mapping | str) -> dict:
-        """One request -> one response document (never raises)."""
+        """One request -> one response document (never raises).  Refused
+        requests (oversize document, admission limit) answer with
+        ``{"ok": false, "error": ..., "status": 413 | 429}``."""
         t0 = time.perf_counter()
         try:
+            if isinstance(request, str) \
+                    and len(request) > self.max_body_bytes:
+                raise RequestTooLarge(
+                    f"request document is {len(request)} bytes "
+                    f"(max_body_bytes={self.max_body_bytes})")
             req = json.loads(request) if isinstance(request, str) \
                 else request
             if isinstance(req, Mapping) and "op" in req:
@@ -429,8 +466,45 @@ class SweepService:
             self._record(True, n_cells(result.spec), elapsed_ms)
             return resp
         except Exception as e:  # noqa: BLE001 — the server must survive
-            self._record(False, 0, (time.perf_counter() - t0) * 1e3)
-            return {"ok": False, "error": f"{type(e).__name__}: {e}"}
+            return self._error_response(
+                e, (time.perf_counter() - t0) * 1e3)
+
+    def refuse_oversized(self, nbytes: int) -> dict:
+        """A transport-level 413 for a body it refused to even read
+        (same counting and document shape as the in-handler guard)."""
+        return self._error_response(
+            RequestTooLarge(f"request body is {nbytes} bytes "
+                            f"(max_body_bytes={self.max_body_bytes})"),
+            0.0)
+
+    def _error_response(self, e: BaseException, elapsed_ms: float) -> dict:
+        with self._lock:
+            if isinstance(e, RequestTooLarge):
+                self.rejected_too_large += 1
+            elif isinstance(e, ServiceOverloaded):
+                self.rejected_overloaded += 1
+        self._record(False, 0, elapsed_ms)
+        resp = {"ok": False, "error": f"{type(e).__name__}: {e}"}
+        status = getattr(e, "http_status", None)
+        if status is not None:
+            resp["status"] = status
+        return resp
+
+    @contextlib.contextmanager
+    def _admit(self):
+        """Admission gate around work that starts a new evaluation
+        (cache misses and sharded runs; cache hits and ops bypass it)."""
+        with self._lock:
+            if self._pending >= self.max_pending:
+                raise ServiceOverloaded(
+                    f"{self._pending} evaluations already pending "
+                    f"(max_pending={self.max_pending})")
+            self._pending += 1
+        try:
+            yield
+        finally:
+            with self._lock:
+                self._pending -= 1
 
     def _op(self, req: Mapping) -> dict:
         op = req["op"]
@@ -444,23 +518,27 @@ class SweepService:
         if parsed.plan is not None:
             # sharded mega-requests stream through merge and bypass both
             # the cache and the coalescer (run()'s no-memo policy: the
-            # results are too large to pin)
-            return run_sharded(parsed.sym.resolve(), parsed.plan), "sharded"
+            # results are too large to pin) — but not the admission gate:
+            # they are the heaviest requests the service takes
+            with self._admit():
+                return run_sharded(parsed.sym.resolve(),
+                                   parsed.plan), "sharded"
         key = spec_key(parsed.sym)
         hit = self.cache.get(key)
         if hit is not None:
             return hit, "cache"
-        if self.coalescer is not None:
-            # identical in-flight request? share it without even resolving
-            pending = self.coalescer.join(key)
-            if pending is None:
-                pending = self.coalescer.submit(parsed.sym.resolve(),
-                                                key=key)
-            result = pending.result
-            source = "coalesced" if pending.shared else "evaluated"
-        else:
-            result = self._evaluate(parsed.sym.resolve())
-            source = "evaluated"
+        with self._admit():
+            if self.coalescer is not None:
+                # identical in-flight request? share it without resolving
+                pending = self.coalescer.join(key)
+                if pending is None:
+                    pending = self.coalescer.submit(parsed.sym.resolve(),
+                                                    key=key)
+                result = pending.result
+                source = "coalesced" if pending.shared else "evaluated"
+            else:
+                result = self._evaluate(parsed.sym.resolve())
+                source = "evaluated"
         self.cache.put(key, result)
         return result, source
 
@@ -488,6 +566,12 @@ class SweepService:
                                  "misses": self.cache.misses,
                                  "size": len(self.cache),
                                  "maxsize": self.cache.maxsize},
+                "limits": {"max_pending": self.max_pending,
+                           "max_body_bytes": self.max_body_bytes,
+                           "pending": self._pending,
+                           "rejected_too_large": self.rejected_too_large,
+                           "rejected_overloaded":
+                               self.rejected_overloaded},
             }
         c = self.coalescer
         doc["coalesce"] = {
@@ -654,11 +738,18 @@ class _HttpHandler(BaseHTTPRequestHandler):
             self._reply(404, {"ok": False,
                               "error": f"NotFound: POST {self.path}"})
             return
-        with self.server.service.track():
+        svc = self.server.service
+        with svc.track():
             n = int(self.headers.get("Content-Length") or 0)
-            body = self.rfile.read(n).decode("utf-8", "replace")
-            resp = self.server.service.handle(body)
-            self._reply(200 if resp.get("ok") else 400, resp)
+            if n > svc.max_body_bytes:
+                # refuse before reading: an oversize body never touches
+                # the parser or the heap
+                resp = svc.refuse_oversized(n)
+            else:
+                body = self.rfile.read(n).decode("utf-8", "replace")
+                resp = svc.handle(body)
+            self._reply(200 if resp.get("ok")
+                        else int(resp.get("status", 400)), resp)
 
     def do_GET(self) -> None:  # noqa: N802
         if self.path == "/healthz":

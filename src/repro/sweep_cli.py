@@ -2,6 +2,8 @@
 
     python -m repro.sweep run spec.json --csv out.csv
     python -m repro.sweep show spec.json
+    python -m repro.sweep invert specs/inverse_isocap.json
+    python -m repro.sweep invert spec.json --objective edp --iso-area
     python -m repro.sweep serve < requests.jsonl
     python -m repro.sweep serve --http 127.0.0.1:8731 \
         --warmup-spec specs/isocap.json --stats-on-exit
@@ -17,6 +19,14 @@ and streams partial results through the order-invariant merge — the path
 for mega-specs too large for one fold.  ``mega`` builds and runs the full
 DTCO cross product (``repro.scenarios.mega_spec``, 1e5+ cells) through
 that path.  ``show`` resolves without evaluating (spec linting).
+
+``invert`` runs the gradient-based inverse-design solver
+(:mod:`repro.inverse`) over a spec's corner grid: it accepts either a
+``deepnvm.inverse/1`` problem document or a bare sweepspec plus flags
+(``--objective edp --iso-area`` is the paper-style "minimize EDP at the
+grid's own max area" question), prints the converged-design summary to
+stderr, and emits the auditable result document (leaves, standard-path
+re-evaluation, parity, gain vs the grid argmin) as JSON.
 
 ``serve`` is the long-lived mode, backed by the concurrent
 :class:`repro.sweep.service.SweepService` (see that module for the full
@@ -167,6 +177,57 @@ def cmd_mega(args: argparse.Namespace) -> None:
         print(json.dumps(result.summary(), indent=2))
 
 
+def cmd_invert(args: argparse.Namespace) -> None:
+    """Gradient-based inverse design: accepts a ``deepnvm.inverse/1``
+    problem document or a bare sweepspec (the spec's corner grid becomes
+    the relaxation's span; solver fields come from the flags)."""
+    import dataclasses
+
+    from repro import inverse
+
+    raw = sys.stdin.read() if args.spec == "-" else open(args.spec).read()
+    doc = json.loads(raw)
+    if doc.get("schema") == inverse.SCHEMA:
+        prob = inverse.InverseProblem.from_json(doc)
+    else:
+        prob = inverse.InverseProblem(
+            sweep=SymbolicSweepSpec.from_json(doc),
+            name=doc.get("name", "inverse"))
+    # flags override the document's fields only when given
+    over: dict = {}
+    if args.objective is not None:
+        over["objective"] = args.objective
+    if args.iso_area:
+        over["area_budget_mm2"] = "iso"
+    elif args.budget is not None:
+        over["area_budget_mm2"] = args.budget
+    elif args.no_budget:
+        over["area_budget_mm2"] = None
+    if args.target is not None:
+        over["target"] = args.target
+    if args.include_dram:
+        over["include_dram"] = True
+    for field in ("starts", "iters", "lr", "seed"):
+        if getattr(args, field) is not None:
+            over[field] = getattr(args, field)
+    if over:
+        prob = dataclasses.replace(prob, **over)
+
+    t0 = time.perf_counter()
+    res = inverse.solve(prob)
+    dt = time.perf_counter() - t0
+    print(f"{prob.name}: {prob.starts} starts x {prob.iters} iters "
+          f"in {dt:.1f}s", file=sys.stderr)
+    print(res.summary(), file=sys.stderr)
+    out = json.dumps(res.to_doc(), indent=2) + "\n"
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(out)
+        print(f"result -> {args.json}", file=sys.stderr)
+    else:
+        sys.stdout.write(out)
+
+
 def cmd_show(args: argparse.Namespace) -> None:
     sym = _load(args.spec)
     spec = sym.resolve()
@@ -218,7 +279,9 @@ def cmd_serve(args: argparse.Namespace) -> None:
     window_ms = args.window_ms if args.window_ms is not None \
         else (0.0 if stdio and not (args.http or args.unix) else 5.0)
     svc = SweepService(window_ms=window_ms, max_batch=args.max_batch,
-                      coalesce=not args.no_coalesce)
+                      coalesce=not args.no_coalesce,
+                      max_pending=args.max_pending,
+                      max_body_bytes=args.max_body_bytes)
     if args.warmup or args.warmup_spec or args.compile_cache:
         info = svc.warmup(specs=tuple(args.warmup_spec or ()),
                           compile_cache_dir=args.compile_cache,
@@ -303,6 +366,39 @@ def main(argv: list[str] | None = None) -> None:
     _add_shard_flags(mega_p)
     mega_p.set_defaults(func=cmd_mega)
 
+    inv_p = sub.add_parser(
+        "invert",
+        help="gradient-based inverse design over a spec's corner grid")
+    inv_p.add_argument("spec", help="deepnvm.inverse/1 problem JSON or a "
+                                    "sweepspec JSON ('-' for stdin)")
+    inv_p.add_argument("--objective", choices=["edp", "edap"], default=None,
+                       help="objective to minimize (default: the "
+                            "document's, else edp)")
+    inv_p.add_argument("--iso-area", action="store_true",
+                       help="area budget = max grid-corner area (the "
+                            "iso-area formulation)")
+    inv_p.add_argument("--budget", type=float, metavar="MM2",
+                       help="explicit area budget in mm^2")
+    inv_p.add_argument("--no-budget", action="store_true",
+                       help="drop the area constraint entirely")
+    inv_p.add_argument("--target", type=float, metavar="VALUE",
+                       help="target-hitting mode: drive the objective to "
+                            "VALUE instead of minimizing")
+    inv_p.add_argument("--include-dram", action="store_true",
+                       help="include DRAM terms in the EDP objective")
+    inv_p.add_argument("--starts", type=int, default=None, metavar="N",
+                       help="multi-start batch size")
+    inv_p.add_argument("--iters", type=int, default=None, metavar="N",
+                       help="Adam iterations per start")
+    inv_p.add_argument("--lr", type=float, default=None,
+                       help="Adam learning rate (ln-leaf space)")
+    inv_p.add_argument("--seed", type=int, default=None,
+                       help="start-sampling seed")
+    inv_p.add_argument("--json", metavar="PATH",
+                       help="write the result document here (default: "
+                            "stdout)")
+    inv_p.set_defaults(func=cmd_invert)
+
     show_p = sub.add_parser("show", help="resolve a spec without running")
     show_p.add_argument("spec")
     show_p.set_defaults(func=cmd_show)
@@ -327,6 +423,13 @@ def main(argv: list[str] | None = None) -> None:
                          help="max requests merged per coalesced batch")
     serve_p.add_argument("--no-coalesce", action="store_true",
                          help="disable request coalescing")
+    serve_p.add_argument("--max-pending", type=int, default=64, metavar="N",
+                         help="evaluations admitted concurrently before "
+                              "requests are refused with 429")
+    serve_p.add_argument("--max-body-bytes", type=int, default=1 << 20,
+                         metavar="N",
+                         help="largest request document accepted (larger "
+                              "bodies are refused with 413, unread)")
     serve_p.add_argument("--warmup", action="store_true",
                          help="pre-trace engine + fold kernels at the "
                               "registered pad-width buckets before serving")

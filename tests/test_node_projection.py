@@ -200,7 +200,7 @@ def test_engine_needs_no_new_trace_per_node():
     caps = (3 * 2**20,)
     engine.sweep(caps, nodes=TECH_16NM)
     engine.sweep(caps, nodes=scaled_node(13e-9, name="warm-13nm"))
-    base = engine._ppa_kernel._cache_size()
+    base = engine.ppa_fn._cache_size()
     for nm in (11.0, 9.0):
         engine.sweep(caps, nodes=scaled_node(nm * 1e-9, name=f"t-{nm:g}nm"))
-    assert engine._ppa_kernel._cache_size() == base
+    assert engine.ppa_fn._cache_size() == base

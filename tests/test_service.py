@@ -17,6 +17,10 @@ Families:
              --stats-on-exit output after answering real traffic;
   stats      the {"op": "stats"} document: request counters, cache and
              coalesce counters, cells/elapsed_ms percentiles;
+  backpressure  oversize documents answer 413 (HTTP refuses before
+             reading the body), the bounded admission gate answers 429
+             with cache hits and ops exempt, and both are counted in
+             stats()["limits"];
   lm         lm/<arch>/<shape>@b<n> resolution, inverse, registry names,
              and end-to-end service evaluation of batch-override cells.
 """
@@ -425,4 +429,100 @@ def test_lm_batch_cells_through_service():
         expected = sweep.run(SymbolicSweepSpec.from_json(d).resolve())
         assert_rows_match(resp["rows"], expected.rows())
     finally:
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+# Backpressure: size limit (413) and admission gate (429)
+# ---------------------------------------------------------------------------
+
+
+def test_oversize_request_refused_with_413():
+    svc = SweepService(window_ms=0.0, max_body_bytes=128)
+    try:
+        resp = svc.handle("x" * 256)
+        assert resp["ok"] is False
+        assert resp["status"] == 413
+        assert "RequestTooLarge" in resp["error"]
+        limits = svc.stats()["limits"]
+        assert limits["rejected_too_large"] == 1
+        assert limits["max_body_bytes"] == 128
+        # a normally-sized request still works on the same service
+        ok = svc.handle(json.dumps({"op": "ping"}))
+        assert ok["ok"]
+    finally:
+        svc.close()
+
+
+def test_overload_refused_with_429_and_cache_hits_exempt():
+    release = threading.Event()
+
+    def slow(spec):
+        release.wait(timeout=60.0)
+        return evaluate_spec(spec)
+
+    svc = SweepService(window_ms=0.0, coalesce=False, evaluate=slow,
+                       max_pending=1)
+    warm = doc("bp-warm")
+    try:
+        # warm one result into the cache (no contention yet)
+        release.set()
+        assert svc.handle(warm)["ok"]
+        release.clear()
+
+        # occupy the single admission slot with a slow evaluation
+        first = {}
+        t = threading.Thread(
+            target=lambda: first.update(resp=svc.handle(doc("bp-slow"))))
+        t.start()
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline:
+            with svc._lock:
+                if svc._pending:
+                    break
+            time.sleep(0.01)
+
+        # a second evaluation is refused with 429...
+        refused = svc.handle(doc("bp-refused"))
+        assert refused["ok"] is False
+        assert refused["status"] == 429
+        assert "ServiceOverloaded" in refused["error"]
+        # ...but ops and cache hits are never refused
+        assert svc.handle({"op": "stats"})["ok"]
+        hit = svc.handle(warm)
+        assert hit["ok"] and hit["source"] == "cache"
+
+        release.set()
+        t.join(timeout=60.0)
+        assert first["resp"]["ok"]
+        limits = svc.stats()["limits"]
+        assert limits["rejected_overloaded"] == 1
+        assert limits["pending"] == 0
+    finally:
+        release.set()
+        svc.close()
+
+
+def test_http_oversize_body_refused_before_read():
+    svc = SweepService(window_ms=0.0, max_body_bytes=512)
+    srv = service_mod.SweepHTTPServer(("127.0.0.1", 0), svc)
+    port = srv.server_address[1]
+    threading.Thread(target=srv.serve_forever, daemon=True).start()
+    url = f"127.0.0.1:{port}"
+    try:
+        assert client.wait_ready(url, timeout=10.0)
+        big = doc("http-too-big",
+                  scens=tuple(SCENARIOS) * 40,
+                  designs=designs_at(CAPS) * 40)
+        assert len(json.dumps(big)) > 512
+        resp = client.http_request(url, big)
+        assert resp["ok"] is False
+        assert resp["status"] == 413
+        small = client.http_request(url, {"op": "ping"})
+        assert small["ok"]
+        stats = client.http_stats(url)["stats"]["limits"]
+        assert stats["rejected_too_large"] == 1
+    finally:
+        srv.shutdown()
+        srv.server_close()
         svc.close()
